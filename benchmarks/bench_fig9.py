@@ -1,0 +1,89 @@
+"""Fig 9 — power / latency / energy across the 12 rCiM topologies.
+
+Two sections (both dimensions of the paper's 6912-implementation study,
+decoupled so the sweep stays CPU-tractable):
+
+  A. *recipe sweep* — all 64 synthesis recipes x 12 topologies per circuit
+     at ``scale`` (tiny/default).  Shows the recipe-quality spread the
+     paper's Table I best/worst rows rely on.
+
+  B. *topology trends* — paper-scale circuits (characterization only, no
+     transforms) swept over the 12 topologies.  This is the width-bound
+     regime where Fig 9's claims live: 3-macro vs 1-macro energy (-39%),
+     macro-doubling energy drop (-47%), 6-macro latency (-66% vs single).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import circuits as C
+from repro.core.explorer import explore
+from repro.core.mapping import schedule_stats
+from repro.core.sram import MACRO_SIZES_KB, EnergyModel, SramTopology, evaluate
+
+from .common import Csv
+
+
+def run(csv: Csv, scale: str = "tiny", recipes=None) -> dict:
+    results = {}
+    # ---- section A: recipe sweep -----------------------------------------
+    suite = C.benchmark_suite(scale=scale)
+    total = 0
+    for name, rtl in suite.items():
+        t0 = time.time()
+        res = explore(rtl, recipes=recipes)
+        dt = (time.time() - t0) * 1e6
+        results[name] = res
+        total += len(res.evaluations)
+        es = [ev.metrics.energy_nj for ev in res.evaluations if ev.schedule.fits]
+        spread = (max(es) / min(es)) if es else 0.0
+        csv.add(
+            f"fig9/recipes/{name}", dt,
+            f"impls={len(res.evaluations)};best={res.best.topo.name}"
+            f"({','.join(res.best.recipe) or '-'});"
+            f"energy_spread={spread:.1f}x",
+        )
+    csv.add("fig9/recipes/TOTAL", 0.0,
+            f"implementations={total}(paper 6912 at server scale)")
+
+    # ---- section B: topology trends at paper scale -------------------------
+    em = EnergyModel()
+    trends = dict(d3m=[], d48=[], lat6=[], best6=[])
+    for name, rtl in C.benchmark_suite(scale="paper").items():
+        st = rtl.characterize()
+
+        def met(kb, m):
+            t = SramTopology(kb, m)
+            return evaluate(schedule_stats(st, t), t, em)
+
+        e41, e81 = met(4, 1), met(8, 1)
+        d48 = 100 * (1 - e81.energy_nj / e41.energy_nj)
+        d3m = sum(
+            100 * (1 - met(kb, 3).energy_nj / met(kb, 1).energy_nj)
+            for kb in MACRO_SIZES_KB
+        ) / len(MACRO_SIZES_KB)
+        lat6 = sum(
+            100 * (1 - met(kb, 6).latency_ns / met(kb, 1).latency_ns)
+            for kb in MACRO_SIZES_KB
+        ) / len(MACRO_SIZES_KB)
+        best6 = 100 * (
+            1 - min(met(kb, 6).energy_nj for kb in MACRO_SIZES_KB) / e41.energy_nj
+        )
+        for k, v in zip(("d3m", "d48", "lat6", "best6"), (d3m, d48, lat6, best6)):
+            trends[k].append(v)
+        csv.add(
+            f"fig9/topology/{name}", 0.0,
+            f"gates={st.total_gates};levels={st.n_levels};"
+            f"E_3m_vs_1m={d3m:.0f}%;E_4to8KB={d48:.0f}%;"
+            f"T_6m_vs_1m={lat6:.0f}%;E_best6_vs_1x4KB={best6:.0f}%",
+        )
+    n = len(trends["d3m"])
+    csv.add(
+        "fig9/topology/AVERAGE", 0.0,
+        f"E_3m_vs_1m={sum(trends['d3m'])/n:.1f}%(paper 39);"
+        f"E_4to8KB={sum(trends['d48'])/n:.1f}%(paper 47);"
+        f"T_6m_vs_1m={sum(trends['lat6'])/n:.1f}%(paper 66);"
+        f"E_best6_vs_1x4KB={sum(trends['best6'])/n:.1f}%(paper 80.9)",
+    )
+    return results

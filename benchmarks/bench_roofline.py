@@ -1,0 +1,48 @@
+"""Roofline table reader — aggregates runs/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (one row per arch x shape x mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Csv
+
+
+def load_records(out_dir: str = "runs/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag"):
+            continue  # explorer variants live in their own table
+        recs.append(rec)
+    return recs
+
+
+def run(csv: Csv, out_dir: str = "runs/dryrun") -> list[dict]:
+    recs = load_records(out_dir)
+    if not recs:
+        csv.add("roofline/NO_RECORDS", 0.0, "run repro.launch.dryrun first")
+        return []
+    n_ok = n_skip = 0
+    for rec in recs:
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if "skipped" in rec:
+            n_skip += 1
+            csv.add(name, 0.0, f"SKIP:{rec['skipped']}")
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom else 0.0
+        csv.add(
+            name, rec["compile_s"] * 1e6,
+            f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+            f"collective={r['collective_s']:.4f}s;bottleneck={r['bottleneck']};"
+            f"roofline_frac={frac:.3f};useful={r['useful_ratio']:.2f};"
+            f"hbm={rec['hbm_per_device_gb']:.2f}GB",
+        )
+    csv.add("roofline/SUMMARY", 0.0, f"ok={n_ok};skipped={n_skip}")
+    return recs

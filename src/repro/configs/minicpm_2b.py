@@ -1,0 +1,17 @@
+"""minicpm-2b — dense llama-like, WSD schedule. [arXiv:2404.06395; hf]
+40L d_model=2304 36H (GQA kv=36) d_ff=5760 vocab=122753."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    head_dim=64,
+    d_ff=5760,
+    vocab_size=122_753,
+    pattern=("attn",),
+    tie_embeddings=True,
+)

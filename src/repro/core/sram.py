@@ -1,0 +1,281 @@
+"""rCiM SRAM topology library + calibrated analytical energy/latency model.
+
+The paper (§III-D, Alg. I lines 11-12) derives power/latency/energy "through
+an analytical estimation approach combined with initial simulation data"
+(post-layout Cadence characterization of each macro).  We cannot re-run
+Spectre, so the per-op / per-cycle constants below are *calibrated against
+the paper's published numbers*:
+
+  * 65 fJ / NAND2, 116 fJ / NOR2 (Table II, §IV-D)
+  * 1 GHz global clock, TSMC 28 nm, 1.66 um^2 / 10T bitcell
+  * 8 KB single macro: 88.2-106.6 GOPS, 8.64-10.45 TOPS/W
+  * Fig 9 / Table I relative trends (see tests/test_explorer.py)
+
+Two accounting modes:
+
+  * ``paper``   — reproduces the paper's own Table I arithmetic.  Reverse-
+    engineering Table I shows its power column is almost exactly
+    ``P[mW] = 1.157 mW x level_count`` for every benchmark/topology pair
+    (adder L=4 -> 4.62 mW ... square L=21 -> 24.3 mW), with
+    ``E = P x latency``.  This mode exists to replicate the paper's tables.
+  * ``physical`` — a self-consistent decomposition
+        E = T x P_ctrl + (active macro-cycles) x (k_macro + k_col x cols)
+              + sum_ops E_op(type)
+    with constants fitted to the paper's headline ratios.  NOTE (documented
+    deviation): the paper's §IV-B six-macro claims are internally
+    inconsistent (it states both "clock cycles remain the same as
+    three-macro" and "47% lower latency than three-macro"); under the
+    physical model six-macro energy lands between -40%..+6% of three-macro
+    rather than the paper's +15%.  All other headline trends reproduce.
+
+Geometry: one bank is 128x128 (2 KB) as in the paper ("a 2KB SRAM bank with
+128x128 SRAM bit cells can perform 64 logical operations in a single
+computational cycle").  Macro sizes follow Table II ((256x256)=8KB,
+(512x256)=16KB):
+
+    4 KB  = 256 rows x 128 cols      16 KB = 512 rows x 256 cols
+    8 KB  = 256 rows x 256 cols      32 KB = 512 rows x 512 cols
+
+``ops_per_cycle = cols / 2`` (one sense amplifier per column pair).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+# ---------------------------------------------------------------------------
+# Topology library — 12 entries: {4, 8, 16, 32} KB x {1, 3, 6} macros
+# ---------------------------------------------------------------------------
+
+# (rows, cols) per macro size.  A macro is a grid of 128x128 (2 KB) banks
+# organized WIDE (more columns -> more sense amplifiers -> more parallel
+# ops), which is the only organization consistent with the paper's own
+# numbers: Table II's (512x256)x3 = 16 KB macro delivers 2x the GOPS of
+# (256x256)x3 = 8 KB (so the 512 counts columns), and Fig 9(b)'s latency
+# drops on macro doubling require column count to grow with size.
+_GEOMETRY = {
+    4: (256, 128),
+    8: (256, 256),
+    16: (256, 512),
+    32: (256, 1024),
+}
+
+MACRO_SIZES_KB = (4, 8, 16, 32)
+MACRO_COUNTS = (1, 3, 6)
+
+OP_TYPES = ("nand", "nor", "inv")
+
+
+@dataclasses.dataclass(frozen=True)
+class SramTopology:
+    macro_kb: int
+    n_macros: int
+
+    @property
+    def rows(self) -> int:
+        return _GEOMETRY[self.macro_kb][0]
+
+    @property
+    def cols(self) -> int:
+        return _GEOMETRY[self.macro_kb][1]
+
+    @property
+    def total_kb(self) -> int:
+        return self.macro_kb * self.n_macros
+
+    @property
+    def total_bits(self) -> int:
+        return self.total_kb * 1024 * 8
+
+    @property
+    def ops_per_cycle_per_macro(self) -> int:
+        return self.cols // 2
+
+    @property
+    def name(self) -> str:
+        return f"({self.macro_kb}KB)x{self.n_macros}"
+
+    @property
+    def n_banks_per_macro(self) -> int:
+        return max(1, self.macro_kb // 2)
+
+    def area_mm2(self, model: "EnergyModel") -> float:
+        cell = self.total_bits * model.bitcell_um2 * 1e-6  # mm^2
+        return cell * (1.0 + model.periphery_overhead)
+
+
+TOPOLOGY_LIBRARY: tuple[SramTopology, ...] = tuple(
+    SramTopology(kb, m) for kb in MACRO_SIZES_KB for m in MACRO_COUNTS
+)
+
+
+# ---------------------------------------------------------------------------
+# Energy / latency model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    """Calibrated constants (TSMC 28 nm, 1 V, 1 GHz — paper §IV-A)."""
+
+    f_clk_hz: float = 1e9
+    # Per-op all-in energies (compute + resonant writeback), Table II.
+    e_op_fj: tuple[float, float, float] = (65.0, 116.0, 65.0)  # nand, nor, inv
+    # Marginal per-op energies used in the physical-mode TOTAL energy
+    # decomposition.  NOTE: the paper's Table I totals are inconsistent with
+    # its own 65 fJ/op figure (e.g. multiplier worst case: 35.6k gates x
+    # 65 fJ = 2.3 nJ > the reported 0.90 nJ total), so total-energy
+    # accounting cannot charge the standalone per-op energy per gate.  We
+    # charge a calibrated post-recycling marginal energy instead; the
+    # standalone figures above are still used for Table II-style per-op
+    # metrics.
+    e_op_marginal_fj: tuple[float, float, float] = (5.0, 9.0, 5.0)
+    # Resonant write driver: fraction of writeback energy recycled (refs
+    # [51][52]; exposed so the tool can report non-resonant baselines).
+    writeback_fj_nonresonant: float = 80.0
+    resonance_recycle_eta: float = 0.65
+    # Physical-mode per-cycle terms (fit: see tests/test_explorer.py).
+    p_ctrl_mw: float = 3.6          # design-constant control/clock power
+    e_macro_cycle_fj: float = 90.0  # per active macro per cycle (decode/WL)
+    e_col_cycle_fj: float = 0.45    # per column per active macro-cycle (PRE)
+    # Paper-mode constant: P = alpha * levels  (reverse-engineered Table I).
+    alpha_mw_per_level: float = 1.157
+    # Area model
+    bitcell_um2: float = 1.66
+    periphery_overhead: float = 0.30
+    # Throughput derating (writeback/pipeline bubbles) to match Table II GOPS.
+    pipeline_utilization: float = 0.80
+
+    def resonant_saving_fj(self) -> float:
+        """Energy recycled per written bit vs a conventional driver."""
+        return self.writeback_fj_nonresonant * self.resonance_recycle_eta
+
+
+@dataclasses.dataclass
+class Metrics:
+    power_mw: float
+    latency_ns: float
+    energy_nj: float
+    cycles: int
+    throughput_gops: float
+    tops_per_watt: float
+    gops_per_mm2: float
+    area_mm2: float
+
+    def as_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def evaluate(
+    schedule: "MappingResult",
+    topo: SramTopology,
+    model: EnergyModel | None = None,
+    mode: str = "physical",
+) -> Metrics:
+    """Power/latency/energy for a scheduled workload on a topology.
+
+    ``schedule`` comes from mapping.schedule_netlist (cycles + op counts).
+    """
+    from .mapping import MappingResult  # circular-import guard
+
+    assert isinstance(schedule, MappingResult)
+    model = model or EnergyModel()
+    cycles = schedule.total_cycles
+    t_ns = cycles / model.f_clk_hz * 1e9
+    n_ops = schedule.op_counts
+    e_ops_fj = sum(n_ops[t] * e for t, e in zip(OP_TYPES, model.e_op_marginal_fj))
+
+    if mode == "paper":
+        p_mw = model.alpha_mw_per_level * schedule.n_levels
+        e_nj = p_mw * t_ns * 1e-3  # mW * ns = pJ; /1e3 -> nJ
+    elif mode == "physical":
+        e_ctrl_fj = model.p_ctrl_mw * 1e-3 * (t_ns * 1e-9) * 1e15
+        macro_cycles = schedule.active_macro_cycles
+        e_macro_fj = macro_cycles * (
+            model.e_macro_cycle_fj + model.e_col_cycle_fj * topo.cols
+        )
+        e_nj = (e_ctrl_fj + e_macro_fj + e_ops_fj) * 1e-6
+        p_mw = e_nj / t_ns * 1e3 if t_ns > 0 else 0.0
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    total_ops = sum(n_ops.values())
+    thr_gops = (
+        total_ops / (t_ns * 1e-9) / 1e9 * model.pipeline_utilization
+        if t_ns > 0
+        else 0.0
+    )
+    area = topo.area_mm2(model)
+    tops_w = (thr_gops / 1e3) / (p_mw * 1e-3) if p_mw > 0 else 0.0
+    return Metrics(
+        power_mw=p_mw,
+        latency_ns=t_ns,
+        energy_nj=e_nj,
+        cycles=cycles,
+        throughput_gops=thr_gops,
+        tops_per_watt=tops_w,
+        gops_per_mm2=thr_gops / area if area > 0 else 0.0,
+        area_mm2=area,
+    )
+
+
+def table2_metrics(
+    topo: SramTopology,
+    model: EnergyModel | None = None,
+    nor_fraction: float = 0.5,
+) -> dict:
+    """Table II-style standalone metrics (throughput, TOPS/W, GOPS/mm^2).
+
+    Uses the *standalone* per-op energies (65/116 fJ) plus a control-power
+    share — this is the accounting that reproduces the paper's published
+    8 KB single-macro range (88.2-106.6 GOPS, 8.64-10.45 TOPS/W,
+    551-666 GOPS/mm^2); the NAND/NOR mix sets where in the range we land.
+    """
+    model = model or EnergyModel()
+    w = topo.ops_per_cycle_per_macro * topo.n_macros
+    # NOR discharge (350 ps) utilizes the 1 ns cycle worse than NAND (150 ps)
+    util = model.pipeline_utilization * (1.0 - 0.14 * nor_fraction)
+    gops = w * model.f_clk_hz / 1e9 * util
+    e_mix_fj = (1 - nor_fraction) * model.e_op_fj[0] + nor_fraction * model.e_op_fj[1]
+    p_mw = gops * e_mix_fj * 1e-3 + model.p_ctrl_mw * 0.4
+    area = topo.area_mm2(model)
+    return dict(
+        throughput_gops=gops,
+        power_mw=p_mw,
+        tops_per_watt=(gops / 1e3) / (p_mw * 1e-3),
+        gops_per_mm2=gops / area,
+        area_mm2=area,
+    )
+
+
+def peak_throughput_gops(topo: SramTopology, model: EnergyModel | None = None) -> float:
+    model = model or EnergyModel()
+    return (
+        topo.ops_per_cycle_per_macro
+        * topo.n_macros
+        * model.f_clk_hz
+        / 1e9
+        * model.pipeline_utilization
+    )
+
+
+def inductor_size_nh(
+    topo: SramTopology,
+    model: EnergyModel | None = None,
+    c_bl_per_cell_ff: float = 0.08,
+    f_res_hz: float | None = None,
+) -> float:
+    """Resonant inductor sizing (Alg. I line 15).
+
+    Series LC: L = 1 / ((2 pi f_res)^2 * C_total).  One inductor is shared
+    by all write drivers of a macro ("utilizing a shared inductor ... the
+    bitline capacitance increases N times for N write drivers"), so
+    C_total = cols x rows x C_cell.
+    """
+    model = model or EnergyModel()
+    f_res = f_res_hz or model.f_clk_hz
+    c_total_f = topo.cols * topo.rows * c_bl_per_cell_ff * 1e-15
+    l_h = 1.0 / ((2 * math.pi * f_res) ** 2 * c_total_f)
+    return l_h * 1e9

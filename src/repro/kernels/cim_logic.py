@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: CiM bit-plane boolean logic engine.
+
+TPU adaptation of the paper's in-SRAM computing (§III-B): the entire
+combinational evaluation happens inside VMEM — the TPU's on-chip SRAM —
+with zero HBM round-trips between logic levels.  The memory-hierarchy
+mapping is
+
+    DRAM -> SRAM array -> bitlines      (paper)
+    HBM  -> VMEM scratch -> VREGs       (here)
+
+and the architectural knobs line up one-to-one with the paper's topology
+space (core/mesh_explorer.py searches them the way Alg. I searches SRAM
+topologies):
+
+    grid tiles over packed test vectors  <->  parallel macros
+    ``block_words`` (lanes per tile)     <->  bank column count M
+    scratch rows (register file)         <->  SRAM rows
+    instruction stream                   <->  wordline-activation schedule
+
+One instruction = one macro op: two row reads (the dual read ports), a
+NAND2/NOR2/NOT on 8x128-lane VREG tiles, one row writeback.  Row indices
+come from ops.compile_netlist, which performs the paper's operand placement
+(with linear-scan row reuse standing in for "operands placed flexibly
+within the two columns").
+
+Kernel layout:
+  * instrs  (n_gates, 4) int32 in VMEM   — [kind, a_row, b_row, out_row]
+  * pi      (n_rows_padded, block_words) — PI planes pre-placed in rows
+  * out     (n_po_padded, block_words)   — gathered PO planes
+  * scratch (n_rows_padded, block_words) VMEM — the "SRAM array"
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+
+
+def _cim_kernel(instr_ref, pi_ref, out_ref, scratch_ref, *, n_gates: int, n_pos: int):
+    # Load the PI planes (pre-placed into their rows by the host wrapper)
+    # into the VMEM "SRAM array".
+    scratch_ref[...] = pi_ref[...]
+
+    def step(i, _):
+        kind = instr_ref[i, 0]
+        a_row = instr_ref[i, 1]
+        b_row = instr_ref[i, 2]
+        o_row = instr_ref[i, 3]
+        a = pl.load(scratch_ref, (pl.dslice(a_row, 1), slice(None)))
+        b = pl.load(scratch_ref, (pl.dslice(b_row, 1), slice(None)))
+        is_nor = (kind == 1).astype(jnp.int32)
+        and_ab = jnp.bitwise_and(a, b)
+        or_ab = jnp.bitwise_or(a, b)
+        res = jnp.bitwise_not(jnp.where(is_nor == 1, or_ab, and_ab))
+        pl.store(scratch_ref, (pl.dslice(o_row, 1), slice(None)), res)
+        return 0
+
+    jax.lax.fori_loop(0, n_gates, step, 0)
+
+    # Gather POs: instruction slots [n_gates, n_gates + n_pos) carry the PO
+    # row index in column 3 (kind = 3 sentinel).
+    def gather(j, _):
+        row = instr_ref[n_gates + j, 3]
+        v = pl.load(scratch_ref, (pl.dslice(row, 1), slice(None)))
+        pl.store(out_ref, (pl.dslice(j, 1), slice(None)), v)
+        return 0
+
+    jax.lax.fori_loop(0, n_pos, gather, 0)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows", "n_gates", "n_pos", "block_words", "interpret"),
+)
+def cim_pallas_call(
+    instrs: jax.Array,  # (n_gates + n_pos, 4) int32 (PO gather slots appended)
+    pi_planes: jax.Array,  # (n_rows_padded, n_words) int32, PIs pre-placed
+    n_rows: int,
+    n_gates: int,
+    n_pos: int,
+    block_words: int = 512,
+    interpret: bool = True,
+):
+    n_rows_p, n_words = pi_planes.shape
+    assert n_rows_p == _round_up(n_rows, SUBLANE)
+    assert n_words % block_words == 0, (n_words, block_words)
+    n_pos_p = _round_up(n_pos, SUBLANE)
+    grid = (n_words // block_words,)
+
+    out = pl.pallas_call(
+        functools.partial(_cim_kernel, n_gates=n_gates, n_pos=n_pos),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((instrs.shape[0], 4), lambda j: (0, 0)),
+            pl.BlockSpec((n_rows_p, block_words), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n_pos_p, block_words), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pos_p, n_words), jnp.int32),
+        scratch_shapes=[
+            # VMEM scratch: the "SRAM array".
+            _vmem((n_rows_p, block_words), jnp.int32)
+        ],
+        interpret=interpret,
+    )(instrs, pi_planes)
+    return out
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

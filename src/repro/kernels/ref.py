@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for the CiM bit-plane logic engine.
+
+Semantics contract shared with kernels/cim_logic.py:
+
+  * Signals live in a register file of ``n_rows`` bit-plane rows; each row
+    holds ``n_words`` int32 words = 32*n_words packed test vectors.
+  * Primary inputs occupy rows [0, n_pis).
+  * Instructions are int32 arrays (n_gates, 4): [kind, a_row, b_row, out_row]
+    with kind 0 = NAND2, 1 = NOR2, 2 = NOT (b ignored, = a).
+  * Outputs are gathered from ``po_rows`` after all instructions retire.
+
+This mirrors the paper's execution model: one instruction = one sense-amp
+op (two wordline activations + resonant writeback to a row).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cim_reference(
+    instrs: jax.Array,  # (n_gates, 4) int32
+    pi_planes: jax.Array,  # (n_pis, n_words) int32
+    po_rows: jax.Array,  # (n_pos,) int32
+    n_rows: int,
+) -> jax.Array:
+    """Evaluate the instruction stream; returns (n_pos, n_words) int32."""
+    n_pis, n_words = pi_planes.shape
+    regs = jnp.zeros((n_rows, n_words), dtype=jnp.int32)
+    regs = regs.at[:n_pis].set(pi_planes.astype(jnp.int32))
+
+    def step(i, regs):
+        kind = instrs[i, 0]
+        a = regs[instrs[i, 1]]
+        b = regs[instrs[i, 2]]
+        is_nor = kind == 1
+        res = ~jnp.where(is_nor, a | b, a & b)
+        return regs.at[instrs[i, 3]].set(res)
+
+    regs = jax.lax.fori_loop(0, instrs.shape[0], step, regs)
+    return regs[po_rows]
+
+
+def pack_vectors(bits: np.ndarray) -> np.ndarray:
+    """Pack (n_signals, n_vectors) {0,1} -> (n_signals, ceil(n/32)) int32.
+
+    Vector v maps to bit (v % 32) of word (v // 32), LSB-first.
+    """
+    bits = np.asarray(bits, dtype=np.uint8)
+    n_sig, n_vec = bits.shape
+    n_words = -(-n_vec // 32)
+    padded = np.zeros((n_sig, n_words * 32), dtype=np.uint8)
+    padded[:, :n_vec] = bits
+    out = np.zeros((n_sig, n_words), dtype=np.uint32)
+    for b in range(32):
+        out |= padded[:, b::32].astype(np.uint32) << np.uint32(b)
+    return out.view(np.int32)
+
+
+def unpack_vectors(words: np.ndarray, n_vec: int) -> np.ndarray:
+    """Inverse of pack_vectors -> (n_signals, n_vec) uint8."""
+    w = np.asarray(words).view(np.uint32)
+    n_sig, n_words = w.shape
+    bits = np.zeros((n_sig, n_words * 32), dtype=np.uint8)
+    for b in range(32):
+        bits[:, b::32] = ((w >> np.uint32(b)) & np.uint32(1)).astype(np.uint8)
+    return bits[:, :n_vec]

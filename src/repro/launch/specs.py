@@ -1,0 +1,196 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs(arch, shape)`` gives weak-type-correct, shardable SDS trees
+for the step function of that cell — no device allocation, following the
+shannon/kernels dry-run pattern.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.config import SHAPES, ModelConfig, ParallelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.parallel import sharding as sh
+
+SDS = jax.ShapeDtypeStruct
+
+
+def sds(shape, dtype):
+    return SDS(tuple(int(x) for x in shape), dtype)
+
+
+def _batch_inputs(cfg: ModelConfig, b: int, s: int, train: bool) -> dict:
+    out = dict(tokens=sds((b, s), jnp.int32))
+    if train:
+        out["labels"] = sds((b, s), jnp.int32)
+        out["mask"] = sds((b, s), jnp.float32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.n_patches:
+        out["patches"] = sds((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_logical(cfg: ModelConfig, train: bool) -> dict:
+    out = dict(tokens=("batch", None))
+    if train:
+        out["labels"] = ("batch", None)
+        out["mask"] = ("batch", None)
+    if cfg.is_encoder_decoder:
+        out["frames"] = ("batch", None, None)
+    if cfg.n_patches:
+        out["patches"] = ("batch", None, None)
+    return out
+
+
+class CellSpec:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+
+    def __init__(self, arch: str, shape_name: str, mesh, pc: ParallelConfig | None = None,
+                 cfg: ModelConfig | None = None, q_chunk: int = 1024, kv_chunk: int = 1024,
+                 remat: str = "full", grad_accum: int = 1,
+                 cast_bf16: bool = False, shard_grads: bool = False,
+                 rules_patch: dict | None = None):
+        self.arch = arch
+        self.shape = SHAPES[shape_name]
+        self.cfg = cfg or get_config(arch)
+        self.mesh = mesh
+        from repro.launch.mesh import parallel_config_for
+
+        self.pc = pc or parallel_config_for(mesh)
+        if remat != self.pc.remat:
+            import dataclasses
+
+            self.pc = dataclasses.replace(self.pc, remat=remat)
+        self.rules = sh.rules_for_model(self.cfg, self.pc, mesh)
+        if rules_patch:
+            self.rules.update(rules_patch)
+        self.model = Model(self.cfg, self.pc, mesh=mesh, rules=self.rules,
+                           q_chunk=q_chunk, kv_chunk=kv_chunk)
+        self.grad_accum = grad_accum
+        self.cast_bf16 = cast_bf16
+        self.shard_grads = shard_grads
+
+    # -- parameter / optimizer SDS + shardings -------------------------------
+
+    def param_sds(self, dtype=jnp.float32):
+        shapes = self.model.param_shapes()
+        return jax.tree.map(
+            lambda shp: sds(shp, dtype), shapes,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, int) for e in x),
+        )
+
+    def param_shardings(self):
+        logical = self.model.logical()
+        shapes = self.model.param_shapes()
+        is_lg = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        )
+        return jax.tree.map(
+            lambda lg, shp: NamedSharding(self.mesh, sh.spec_for(self.mesh, shp, lg, self.rules)),
+            logical, shapes, is_leaf=is_lg,
+        )
+
+    def opt_sds(self, opt_cfg: AdamWConfig):
+        p = self.param_sds(jnp.float32)
+        return jax.eval_shape(lambda pp: adamw_init(pp, opt_cfg), p)
+
+    def opt_shardings(self, opt_cfg: AdamWConfig):
+        ps = self.param_shardings()
+        rep = NamedSharding(self.mesh, P())
+        moments = dict(step=rep, m=ps, v=ps)
+        if opt_cfg.compression == "int8_ef":
+            moments["ef"] = ps
+        return moments
+
+    # -- inputs ---------------------------------------------------------------
+
+    def input_sds(self):
+        s = self.shape
+        if s.kind == "train":
+            return _batch_inputs(self.cfg, s.global_batch, s.seq_len, True)
+        if s.kind == "prefill":
+            return _batch_inputs(self.cfg, s.global_batch, s.seq_len, False)
+        # decode: one token step against a seq_len cache
+        return dict(
+            token=sds((s.global_batch,), jnp.int32),
+            pos=sds((), jnp.int32),
+        )
+
+    def cache_sds(self):
+        s = self.shape
+        caches = jax.eval_shape(
+            lambda: self.model.init_cache(s.global_batch, s.seq_len)
+        )
+        return caches
+
+    def cache_shardings(self):
+        logical = self.model.cache_logical_tree()
+        shapes = jax.tree.map(lambda x: x.shape, self.cache_sds())
+        is_lg = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        )
+        return jax.tree.map(
+            lambda lg, shp: NamedSharding(self.mesh, sh.spec_for(self.mesh, shp, lg, self.rules)),
+            logical, shapes, is_leaf=is_lg,
+        )
+
+    def batch_shardings(self):
+        s = self.shape
+        inp = self.input_sds()
+        lg = (
+            batch_logical(self.cfg, s.kind == "train")
+            if s.kind in ("train", "prefill")
+            else dict(token=("batch",), pos=())
+        )
+        return jax.tree.map(
+            lambda l, v: NamedSharding(self.mesh, sh.spec_for(self.mesh, v.shape, l, self.rules)),
+            lg, inp,
+            is_leaf=lambda x: isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x),
+        )
+
+    # -- the step function to lower -------------------------------------------
+
+    def step_fn_and_args(self, opt_cfg: AdamWConfig | None = None):
+        """Returns (fn, arg_sds tuple, in_shardings tuple)."""
+        s = self.shape
+        m = self.model
+        if s.kind == "train":
+            from repro.optim.adamw import adamw_update
+            from repro.train.steps import make_train_step
+            from repro.optim.adamw import AdamWConfig as AC
+
+            opt_cfg = opt_cfg or AC()
+            from repro.optim.adamw import constant_schedule
+
+            step = make_train_step(
+                m, constant_schedule(1e-4), opt_cfg,
+                grad_accum=self.grad_accum,
+                cast_bf16=self.cast_bf16,
+                grad_shardings=self.param_shardings() if self.shard_grads else None,
+            )
+            args = (self.param_sds(jnp.float32), self.opt_sds(opt_cfg), self.input_sds())
+            shards = (self.param_shardings(), self.opt_shardings(opt_cfg),
+                      self.batch_shardings())
+            return step, args, shards, (0, 1)  # donate params + opt state
+        if s.kind == "prefill":
+            fn = lambda params, batch: m.prefill(params, batch)
+            args = (self.param_sds(jnp.bfloat16), self.input_sds())
+            shards = (self.param_shardings(), self.batch_shardings())
+            return fn, args, shards, ()
+        # decode: serve_step
+        fn = lambda params, caches, token, pos: m.decode_step(params, caches, token, pos)
+        inp = self.input_sds()
+        args = (self.param_sds(jnp.bfloat16), self.cache_sds(), inp["token"], inp["pos"])
+        bs = self.batch_shardings()
+        shards = (self.param_shardings(), self.cache_shardings(), bs["token"], bs["pos"])
+        return fn, args, shards, (1,)  # donate the KV caches (in-place update)

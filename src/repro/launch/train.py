@@ -1,0 +1,161 @@
+"""Training launcher (end-to-end driver).
+
+Runs a real training loop on whatever devices are visible — the production
+path is the same code under the production mesh; on this CPU container use
+``--preset smoke`` (tiny) or ``--preset 100m`` (about 100M params).
+
+Fault tolerance exercised here:
+  * atomic keep-N checkpoints + auto-resume (``--resume``),
+  * SIGTERM/SIGINT -> final checkpoint before exit (preemption handling),
+  * deterministic data sharding (restart-safe),
+  * step-time straggler monitor (EMA; logs hosts exceeding the threshold —
+    on a multi-host cluster this feeds the re-balance policy).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_model_config(arch: str, preset: str):
+    from repro.configs import get_config, smoke_config
+
+    if preset == "full":
+        return get_config(arch)
+    if preset == "smoke":
+        return smoke_config(arch)
+    if preset == "100m":
+        base = get_config(arch)
+        return dataclasses.replace(
+            base,
+            n_layers=max(4, min(8, base.n_layers)),
+            d_model=768,
+            n_heads=12,
+            n_kv_heads=12 if base.n_kv_heads == base.n_heads else 4,
+            head_dim=64,
+            d_ff=2048,
+            vocab_size=32_000,
+            vocab_pad_multiple=128,
+            n_experts=base.n_experts and 16,
+            moe_d_ff=base.moe_d_ff and 512,
+            d_inner=1536 if base.family == "ssm" else 0,
+            lru_width=768 if base.lru_width else 0,
+            enc_seq=256 if base.enc_seq else 0,
+        )
+    raise ValueError(preset)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--preset", choices=["smoke", "100m", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", choices=["wsd", "cosine", "const"], default="wsd")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--compression", choices=["none", "bf16", "int8_ef"], default="none")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.ckpt.manager import CheckpointManager
+    from repro.data.pipeline import DataConfig, Pipeline
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.config import ParallelConfig
+    from repro.models.model import Model
+    from repro.optim.adamw import (AdamWConfig, adamw_init, constant_schedule,
+                                   cosine_schedule, wsd_schedule)
+    from repro.parallel import sharding as sh
+    from repro.train.steps import make_train_step
+
+    cfg = build_model_config(args.arch, args.preset)
+    mesh = make_host_mesh(model=args.model_parallel)
+    pc = ParallelConfig(data_axes=("data",), remat="block")
+    rules = sh.rules_for_model(cfg, pc, mesh)
+    model = Model(cfg, pc, mesh=mesh, rules=rules, q_chunk=256, kv_chunk=256)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} preset={args.preset} params={n_params/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    sched = dict(
+        wsd=wsd_schedule(args.lr, max(1, args.steps // 10), args.steps * 8 // 10,
+                         max(1, args.steps // 10)),
+        cosine=cosine_schedule(args.lr, max(1, args.steps // 10), args.steps),
+        const=constant_schedule(args.lr),
+    )[args.schedule]
+    opt_cfg = AdamWConfig(compression=args.compression)
+    opt_state = adamw_init(params, opt_cfg)
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep_n=3) if args.ckpt_dir else None
+    start_step = 0
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        (params, opt_state), meta = ckpt.restore(dict(p=params, o=opt_state)), None
+        params, opt_state = params[0]["p"], params[0]["o"]
+        start_step = int(np.asarray(opt_state["step"]))
+        print(f"resumed from step {start_step}")
+
+    data = Pipeline(
+        DataConfig(batch_per_host=args.batch, seq_len=args.seq,
+                   vocab_size=cfg.vocab_size, seed=args.seed),
+        host=jax.process_index(), n_hosts=jax.process_count(),
+    )
+
+    step_fn = jax.jit(
+        make_train_step(model, sched, opt_cfg, grad_accum=args.grad_accum),
+        donate_argnums=(0, 1),
+    )
+
+    stop = {"now": False}
+    def _sig(_s, _f):
+        stop["now"] = True
+    signal.signal(signal.SIGTERM, _sig)
+    signal.signal(signal.SIGINT, _sig)
+
+    ema = None
+    for step in range(start_step, args.steps):
+        t0 = time.time()
+        batch = {k: jnp.asarray(v) for k, v in data.get_batch(step).items()}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.n_patches:
+            batch["patches"] = jnp.zeros((args.batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        dt = time.time() - t0
+        ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+        if dt > 3.0 * ema and step > start_step + 2:
+            print(f"[straggler-monitor] step {step} took {dt:.2f}s (ema {ema:.2f}s)")
+        if step % max(1, args.steps // 20) == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.3f} "
+                  f"{dt:.2f}s")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, dict(p=params, o=opt_state))
+        if stop["now"]:
+            print("signal received — checkpointing and exiting")
+            if ckpt:
+                ckpt.save(step + 1, dict(p=params, o=opt_state))
+                ckpt.wait()
+            return
+    if ckpt:
+        ckpt.save(args.steps, dict(p=params, o=opt_state))
+        ckpt.wait()
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,519 @@
+"""Transformer building blocks (pure JAX, shard-aware via logical axes).
+
+Parameters are plain nested dicts.  Every leaf is declared with a ParamSpec
+(shape + logical axes + init scale); the same spec tree drives init,
+eval_shape dry-runs, and sharding (parallel/sharding.py maps logical names
+to mesh axes with divisibility fallback).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict of arrays
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    scale: float = 1.0  # stddev multiplier on fan-in init
+    init: str = "normal"  # normal | zeros | ones
+
+    def initializer(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, jnp.float32)
+        if self.init == "ones":
+            return jnp.ones(self.shape, jnp.float32)
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        std = self.scale / math.sqrt(max(1, fan_in))
+        return std * jax.random.normal(key, self.shape, jnp.float32)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_tree(specs, key) -> Params:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.initializer(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def logical_tree(specs):
+    return jax.tree.map(lambda s: s.logical, specs, is_leaf=is_spec)
+
+
+def shape_tree(specs):
+    return jax.tree.map(lambda s: s.shape, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs, n: int):
+    """Prepend a scan ("layers") dim to every leaf spec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.logical), s.scale, s.init),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma)).astype(dt)
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with positions (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    s = dict(
+        wq=ParamSpec((d, h * hd), ("embed", "qkv")),
+        wk=ParamSpec((d, kv * hd), ("embed", "qkv")),
+        wv=ParamSpec((d, kv * hd), ("embed", "qkv")),
+        wo=ParamSpec((h * hd, d), ("qkv", "embed")),
+    )
+    if cfg.qkv_bias:
+        s.update(
+            bq=ParamSpec((h * hd,), ("qkv",), init="zeros"),
+            bk=ParamSpec((kv * hd,), ("qkv",), init="zeros"),
+            bv=ParamSpec((kv * hd,), ("qkv",), init="zeros"),
+        )
+    if cfg.qk_norm:
+        s.update(
+            q_norm=ParamSpec((hd,), (None,), init="zeros"),
+            k_norm=ParamSpec((hd,), (None,), init="zeros"),
+        )
+    return s
+
+
+def _project_qkv(p, x, cfg, positions, theta):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, d)).reshape(
+        b, s, kv * n_rep, d
+    )
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (falls back to s for primes)."""
+    if s <= target:
+        return s
+    if s % target == 0:
+        return target
+    best = 1
+    d = 1
+    while d * d <= s:
+        if s % d == 0:
+            lo, hi = d, s // d
+            if lo <= target:
+                best = max(best, lo)
+            if hi <= target:
+                best = max(best, hi)
+        d += 1
+    return best if best >= max(8, target // 8) else s
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, H, D)  (already GQA-repeated)
+    v: jax.Array,
+    q_offset: int | jax.Array = 0,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    cross: bool = False,
+) -> jax.Array:
+    """Online-softmax attention, O(chunk^2) memory (flash-style, pure JAX).
+
+    Sq and Skv must be divisible by the chunk sizes (pad upstream).  Causal
+    masking is by absolute position (q position = q_offset + index).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    q_chunk = _pick_chunk(sq, q_chunk)
+    kv_chunk = _pick_chunk(skv, kv_chunk)
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    scale = 1.0 / math.sqrt(d)
+
+    qc = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qc,D)
+    kc = k.reshape(b, nkv, kv_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nkv, kv_chunk, h, d).transpose(1, 0, 3, 2, 4)
+
+    q_pos_base = jnp.arange(q_chunk)
+    kv_pos_base = jnp.arange(kv_chunk)
+
+    # NOTE on block skipping: a statically-unrolled q loop that visits only
+    # the un-masked kv blocks (flash-style triangular schedule) was tried
+    # and REGRESSED badly under sequence-sharded residuals — the unroll
+    # defeats the SPMD partitioner and everything gets replicated
+    # (EXPERIMENTS.md §Perf, gemma3 It5: collective 2.48s -> 4.49s).  The
+    # fused scan below lets XLA keep the chunk loop sharded; the masked
+    # upper-triangle compute it wastes is far cheaper than replication.
+    def q_body(qi, q_blk):
+        q_blk = q_blk * scale
+        q_pos = q_offset + qi * q_chunk + q_pos_base
+
+        def kv_body(carry, inp):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inp
+            s_ = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk, preferred_element_type=jnp.float32)
+            if causal and not cross:
+                kv_pos = ki * kv_chunk + kv_pos_base
+                mask = q_pos[:, None] >= kv_pos[None, :]
+                if window:
+                    mask &= q_pos[:, None] - kv_pos[None, :] < window
+                s_ = jnp.where(mask[None, None], s_, -1e30)
+            m_new = jnp.maximum(m, s_.max(-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        # checkpoint the kv step: probabilities are recomputed in the
+        # backward pass instead of being stacked across kv chunks — this is
+        # exactly the flash-attention backward memory trade.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_body), (m0, l0, a0), (jnp.arange(nkv), kc, vc)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # cast at the block boundary so any downstream reshard moves bf16
+        return out.astype(v.dtype)
+
+    out = jax.lax.map(jax.checkpoint(lambda args: q_body(*args)), (jnp.arange(nq), qc))
+    # (nq, B, H, qc, D) -> (B, Sq, H, D)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, d)
+    return out
+
+
+def attention_train(p, x, cfg, kind: str, theta: float, positions=None,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    constrain_fn=None):
+    """Full-sequence (train/prefill) attention for one layer.
+
+    ``constrain_fn`` hoists the sequence-parallel gather of q/k/v to a
+    single collective *before* the chunk loops: without it the SPMD
+    partitioner re-gathers K/V inside every (checkpointed) chunk-loop
+    iteration of the backward pass — measured at ~710 GB/step/device on
+    gemma3-27b train_4k (§Perf It12).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions, theta)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    if constrain_fn is not None:
+        hoist = ("batch", None, "act_heads", None)  # seq gathered ONCE here
+        q = constrain_fn(q, hoist)
+        k = constrain_fn(k, hoist)
+        v = constrain_fn(v, hoist)
+    window = cfg.window if kind == "local" else 0
+    out = chunked_attention(
+        q, k, v, causal=True, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk
+    )
+    out = out.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim).astype(x.dtype)
+    return out @ p["wo"].astype(x.dtype), (k, v)
+
+
+def attention_decode(p, x, cfg, kind: str, theta: float, cache, pos):
+    """Single-token decode against a KV cache.
+
+    cache: dict(k=(B, S_cache, KV, D), v=..., )  pos: scalar current index
+    (same for the whole batch).  Local layers use a ring cache of size
+    ``window`` — positions are mapped modulo the ring.
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, theta)
+
+    s_cache = cache["k"].shape[1]
+    is_ring = kind == "local" and cfg.window and cfg.window < 10**9 and s_cache <= cfg.window
+    slot = jnp.mod(pos, s_cache) if is_ring else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    new_cache = dict(k=k, v=v)
+
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    kk = _repeat_kv(k, n_rep)
+    vv = _repeat_kv(v, n_rep)
+    scale = 1.0 / math.sqrt(hd)
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", (q * scale), kk, preferred_element_type=jnp.float32)
+    kv_idx = jnp.arange(s_cache)
+    if is_ring:
+        # entry at slot i holds absolute position: valid if within window of pos
+        age = jnp.mod(pos - kv_idx, s_cache)
+        valid = (age < jnp.minimum(pos + 1, cfg.window))
+    else:
+        valid = kv_idx <= pos
+        if kind == "local" and cfg.window:
+            valid &= kv_idx > pos - cfg.window
+    s_ = jnp.where(valid[None, None, None, :], s_, -1e30)
+    prob = jax.nn.softmax(s_, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", prob, vv)
+    out = out.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def cross_attention_specs(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    return dict(
+        wq=ParamSpec((d, h * hd), ("embed", "qkv")),
+        wk=ParamSpec((d, kv * hd), ("embed", "qkv")),
+        wv=ParamSpec((d, kv * hd), ("embed", "qkv")),
+        wo=ParamSpec((h * hd, d), ("qkv", "embed")),
+    )
+
+
+def cross_attention(p, x, enc_kv, cfg, q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Decoder cross-attention; enc_kv = (k, v) precomputed from encoder.
+    Uses the chunked online-softmax path so scores never materialize."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k, v = enc_kv
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    out = chunked_attention(q, k, v, causal=False, cross=True,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return out.astype(x.dtype) @ p["wo"].astype(x.dtype)
+
+
+def encode_kv(p, enc_out, cfg):
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return dict(
+        w_gate=ParamSpec((d, f), ("embed", "mlp")),
+        w_up=ParamSpec((d, f), ("embed", "mlp")),
+        w_down=ParamSpec((f, d), ("mlp", "embed")),
+    )
+
+
+def mlp(p, x, cfg):
+    a = act_fn(cfg.act)
+    h = a(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (fine-grained: shared + routed top-k, sort-based dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    s = dict(
+        router=ParamSpec((d, e), ("embed", "experts")),
+        we_gate=ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        we_up=ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        we_down=ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+    )
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        s.update(
+            ws_gate=ParamSpec((d, fs), ("embed", "mlp")),
+            ws_up=ParamSpec((d, fs), ("embed", "mlp")),
+            ws_down=ParamSpec((fs, d), ("mlp", "embed")),
+        )
+    return s
+
+
+def moe_ffn(p, x, cfg, constrain_fn=None, n_groups: int = 1):
+    """Fine-grained MoE with grouped sort-based dispatch (GShard groups).
+
+    Tokens are split into ``n_groups`` groups (one per data shard); ALL
+    routing bookkeeping — top-k, sort, capacity positions, scatter into the
+    (G, E, C, D) buffers, and the combine scatter — is group-local, so the
+    SPMD partitioner never has to replicate the token dimension (a naive
+    global sort/gather forces exactly that and blows HBM by ~10x).  The
+    group dim shards over data; the expert dim shards over the model axis
+    (EP); the reshard between them is the expert-parallel all-to-all.
+    Overflow beyond capacity is dropped (tiny at capacity_factor 1.25).
+    """
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    g = math.gcd(n_groups, n) if n_groups > 1 else 1
+    ng = n // g
+    xt = x.reshape(g, ng, d)
+    a = act_fn(cfg.act)
+
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Ng, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (G, Ng, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style), group-averaged
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (n * k)
+    aux_loss = e * jnp.sum(me * ce)
+
+    cap = int(math.ceil(ng * k / e * cfg.capacity_factor))
+    cap = min(max(cap, 8), ng * k)
+
+    flat_expert = expert_idx.reshape(g, ng * k)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(ng), k)[None], (g, ng * k)
+    )
+    flat_gate = gate_vals.reshape(g, ng * k)
+
+    order = jnp.argsort(flat_expert, axis=-1)
+    se = jnp.take_along_axis(flat_expert, order, axis=-1)
+    st = jnp.take_along_axis(flat_token, order, axis=-1)
+    sg = jnp.take_along_axis(flat_gate, order, axis=-1)
+    pos_all = jnp.broadcast_to(jnp.arange(ng * k)[None], (g, ng * k))
+    run_start = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e), side="left"))(se)
+    pos_in_e = pos_all - jnp.take_along_axis(run_start, se, axis=-1)
+    keep = pos_in_e < cap
+    dst = se * cap + jnp.where(keep, pos_in_e, 0)
+
+    gathered = jnp.take_along_axis(xt, st[..., None], axis=1)  # (G, Ng*k, D)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    buf = jax.vmap(lambda dd, vv: jnp.zeros((e * cap, d), xt.dtype).at[dd].add(vv))(
+        dst, gathered
+    ).reshape(g, e, cap, d)
+    if constrain_fn is not None:
+        buf = constrain_fn(buf, ("batch", "act_experts", None, None))
+
+    h = a(jnp.einsum("gecd,edf->gecf", buf, p["we_gate"].astype(buf.dtype))) * jnp.einsum(
+        "gecd,edf->gecf", buf, p["we_up"].astype(buf.dtype)
+    )
+    y = jnp.einsum("gecf,efd->gecd", h, p["we_down"].astype(buf.dtype))
+    if constrain_fn is not None:
+        y = constrain_fn(y, ("batch", "act_experts", None, None))
+    y = y.reshape(g, e * cap, d)
+
+    yd = jnp.take_along_axis(y, dst[..., None], axis=1)  # (G, Ng*k, D)
+    contrib = jnp.where(keep[..., None], yd * sg[..., None].astype(y.dtype), 0)
+    out = jax.vmap(lambda tt, vv: jnp.zeros((ng, d), xt.dtype).at[tt].add(vv))(
+        st, contrib
+    )
+
+    if cfg.n_shared_experts:
+        hs = a(xt @ p["ws_gate"].astype(xt.dtype)) * (xt @ p["ws_up"].astype(xt.dtype))
+        out = out + hs @ p["ws_down"].astype(xt.dtype)
+    return out.reshape(b, s, d), aux_loss
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg) -> dict:
+    v = cfg.padded_vocab
+    s = dict(tok=ParamSpec((v, cfg.d_model), ("vocab", "embed"), scale=1.0))
+    if not cfg.tie_embeddings:
+        s["unembed"] = ParamSpec((cfg.d_model, v), ("embed", "vocab"))
+    return s
+
+
+def embed(p, tokens, cfg):
+    return jnp.take(p["tok"], tokens, axis=0) * math.sqrt(cfg.d_model)
+
+
+def unembed(p, x, cfg):
+    """Logits over the padded vocab; pad rows masked to -inf (Megatron-style
+    padded-vocab softmax — semantics identical to the unpadded model)."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(x.dtype))
+    else:
+        logits = x @ p["unembed"].astype(x.dtype)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits

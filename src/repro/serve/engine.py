@@ -1,0 +1,144 @@
+"""Batched serving engine: prefill + decode with cache management.
+
+Handles the cache-layout plumbing between the two phases:
+  * global-attention caches are padded from prompt length to max_seq,
+  * local-attention ring caches are rotated so entry i holds absolute
+    position p with p === i (mod window) — the invariant decode_step's
+    ring addressing relies on,
+  * recurrent states (SSD / RG-LRU) pass through unchanged.
+
+A lightweight slot-based batcher (continuous-batching lite) serves
+variable-length requests on a fixed batch of decode slots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+def align_prefill_caches(model: Model, caches, prompt_len: int, max_seq: int,
+                         batch: int):
+    """Pad / rotate prefill caches into decode layout (see module doc).
+
+    The sequence axis of every KV leaf is located through the model's
+    cache-logical tree ("kv_seq") — shape heuristics are unsafe: a
+    window-full ring cache has the SAME shape as its allocation but still
+    needs rotation whenever prompt_len % window != 0 (caught by
+    tests/test_models.py::test_ring_cache_alignment_property).
+    """
+    alloc = jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+    logical = model.cache_logical_tree()
+    window = model.cfg.window
+
+    is_lg = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+
+    def fix(lg, pre, tgt):
+        if "kv_seq" not in lg:
+            assert pre.shape == tgt.shape, (lg, pre.shape, tgt.shape)
+            return pre
+        ax = lg.index("kv_seq")
+        tgt_len = tgt.shape[ax]
+        cur = pre.shape[ax]
+        if window and tgt_len == min(window, tgt_len) and tgt_len == window \
+                and prompt_len >= window:
+            # full ring: rotate so abs position p sits at slot p % window
+            out = pre
+            if cur < tgt_len:
+                pad = [(0, 0)] * pre.ndim
+                pad[ax] = (0, tgt_len - cur)
+                out = jnp.pad(out, pad)
+            shift = prompt_len % window
+            return jnp.roll(out, shift, axis=ax) if shift else out
+        if cur == tgt_len:
+            return pre
+        pad = [(0, 0)] * pre.ndim
+        pad[ax] = (0, tgt_len - cur)
+        return jnp.pad(pre, pad)
+
+    return jax.tree.map(fix, logical, caches, alloc, is_leaf=is_lg)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new: int = 32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Fixed-batch prefill/decode engine with greedy or temperature sampling."""
+
+    def __init__(self, model: Model, params, batch: int, max_seq: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new: int, extra_batch: dict | None = None):
+        """prompts: (B, L) int32 (padded to equal length).  Returns (B, max_new)."""
+        b, plen = prompts.shape
+        assert b == self.batch
+        batch = dict(tokens=jnp.asarray(prompts, jnp.int32))
+        if extra_batch:
+            batch.update(extra_batch)
+        logits, caches = self._prefill(self.params, batch)
+        plen_abs = plen + (self.model.cfg.n_patches or 0)
+        caches = align_prefill_caches(self.model, caches, plen_abs,
+                                      self.max_seq + (self.model.cfg.n_patches or 0),
+                                      batch=b)
+
+        pos_offset = self.model.cfg.n_patches or 0
+        out = np.zeros((b, max_new), np.int32)
+        tok = self._sample(logits)
+        for t in range(max_new):
+            out[:, t] = np.asarray(tok)
+            if t == max_new - 1:
+                break
+            logits, caches = self._decode(
+                self.params, caches, tok, jnp.int32(pos_offset + plen + t)
+            )
+            tok = self._sample(logits)
+        return out
+
+    # -- slot-based continuous batching (lite) -------------------------------
+
+    def serve(self, requests: list[Request], prompt_pad: int) -> list[Request]:
+        """Serve a request list on ``self.batch`` slots, refilling slots as
+        requests finish (waves of prefill + shared decode steps)."""
+        queue = list(requests)
+        done: list[Request] = []
+        while queue:
+            wave = queue[: self.batch]
+            queue = queue[len(wave) :]
+            prompts = np.zeros((self.batch, prompt_pad), np.int32)
+            for i, r in enumerate(wave):
+                prompts[i, -len(r.prompt) :] = r.prompt  # left-pad
+            max_new = max(r.max_new for r in wave)
+            toks = self.generate(prompts, max_new)
+            for i, r in enumerate(wave):
+                r.out_tokens = list(toks[i, : r.max_new])
+                r.done = True
+                done.append(r)
+        return done

@@ -1,0 +1,141 @@
+"""AIG engine + benchmark-circuit functional correctness."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import circuits as C
+from repro.core.aig import Aig, random_aig
+
+
+def bits_of(x, n):
+    return [(x >> i) & 1 for i in range(n)]
+
+
+def word_of(bits):
+    return sum(b << i for i, b in enumerate(bits))
+
+
+random.seed(1234)
+
+
+def test_strash_dedup():
+    aig = Aig(2)
+    a, b = 2, 4  # literals of PI1, PI2
+    x = aig.g_and(a, b)
+    y = aig.g_and(b, a)
+    assert x == y
+    assert aig.n_ands == 1
+    # constant folding
+    assert aig.g_and(a, 0) == 0
+    assert aig.g_and(a, 1) == a
+    assert aig.g_and(a, a ^ 1) == 0
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_adder(n):
+    a = C.gen_adder(n)
+    for _ in range(20):
+        x, y = random.getrandbits(n), random.getrandbits(n)
+        out = a.eval_ints(bits_of(x, n) + bits_of(y, n))
+        assert word_of(out[:n]) == (x + y) % (1 << n)
+        assert out[n] == ((x + y) >> n) & 1
+
+
+def test_multiplier():
+    m = C.gen_multiplier(10)
+    for _ in range(20):
+        x, y = random.getrandbits(10), random.getrandbits(10)
+        out = m.eval_ints(bits_of(x, 10) + bits_of(y, 10))
+        assert word_of(out) == x * y
+
+
+def test_square():
+    m = C.gen_square(9)
+    for _ in range(20):
+        x = random.getrandbits(9)
+        out = m.eval_ints(bits_of(x, 9))
+        assert word_of(out) == x * x
+
+
+def test_divisor():
+    d = C.gen_divisor(10)
+    for _ in range(30):
+        x, y = random.getrandbits(10), random.getrandbits(10) or 1
+        out = d.eval_ints(bits_of(x, 10) + bits_of(y, 10))
+        assert word_of(out[:10]) == x // y
+        assert word_of(out[10:]) == x % y
+
+
+def test_sqrt():
+    s = C.gen_sqrt(16)
+    for _ in range(30):
+        x = random.getrandbits(16)
+        out = s.eval_ints(bits_of(x, 16))
+        assert word_of(out) == int(x**0.5)
+
+
+def test_max():
+    m = C.gen_max(10, 4)
+    for _ in range(20):
+        ws = [random.getrandbits(10) for _ in range(4)]
+        out = m.eval_ints([b for w in ws for b in bits_of(w, 10)])
+        assert word_of(out) == max(ws)
+
+
+def test_barrel():
+    b = C.gen_barrel_shifter(32)
+    for _ in range(20):
+        d, sh = random.getrandbits(32), random.getrandbits(5)
+        out = b.eval_ints(bits_of(d, 32) + bits_of(sh, 5))
+        assert word_of(out) == d >> sh
+
+
+def test_sine_accuracy():
+    import math
+
+    sn = C.gen_sine(10)
+    errs = []
+    for t in range(0, 1 << 10, 31):
+        out = sn.eval_ints(bits_of(t, 10))
+        v = word_of(out) / (1 << 10)
+        errs.append(abs(v - math.sin(t / (1 << 10) * math.pi / 2)))
+    assert max(errs) < 0.02
+
+
+def test_gate_netlist_equivalence():
+    rng = np.random.default_rng(0)
+    for gen in [lambda: C.gen_adder(12), lambda: C.gen_multiplier(6),
+                lambda: random_aig(10, 200, 6, seed=5)]:
+        aig = gen()
+        net = aig.to_gate_netlist()
+        pv = rng.integers(0, 1 << 63, size=(aig.n_pis, 4), dtype=np.int64).astype(np.uint64)
+        assert np.array_equal(aig.simulate(pv), net.simulate(pv))
+
+
+def test_characterize_counts():
+    aig = C.gen_adder(16)
+    st = aig.characterize()
+    assert st.total_gates == st.nand_count + st.nor_count + st.inv_count
+    assert st.n_levels == len(st.ops_per_level)
+    assert sum(sum(l.values()) for l in st.ops_per_level) == st.total_gates
+    assert st.n_levels >= 4  # 16-bit adder needs real depth
+
+
+def test_truth_table_small():
+    aig = Aig(3)
+    a, b, c = 2, 4, 6
+    maj = aig.g_maj(a, b, c)
+    aig.add_po(maj)
+    tt = aig.truth_table(maj, [1, 2, 3])
+    # majority truth table over 3 vars: 0xE8
+    assert tt == 0xE8
+
+
+def test_benchmark_suite_builds():
+    suite = C.benchmark_suite(scale="tiny")
+    assert set(suite) == {"adder", "bar", "mult", "sine", "max", "div", "sqrt",
+                          "square", "log2"}
+    for name, aig in suite.items():
+        assert aig.n_ands > 0 and len(aig.pos) > 0, name

@@ -1,0 +1,149 @@
+"""Algorithm I explorer + calibrated energy model vs the paper's claims.
+
+Bands are deliberately generous: the paper's absolute numbers are not
+internally consistent (see core/sram.py docstring), so we assert the
+*trend directions and rough magnitudes* the paper reports.
+"""
+
+import pytest
+
+from repro.core import circuits as C
+from repro.core.explorer import best_worst, explore
+from repro.core.mapping import schedule_stats
+from repro.core.sram import (
+    MACRO_COUNTS,
+    MACRO_SIZES_KB,
+    TOPOLOGY_LIBRARY,
+    EnergyModel,
+    SramTopology,
+    evaluate,
+    inductor_size_nh,
+    peak_throughput_gops,
+    table2_metrics,
+)
+
+EM = EnergyModel()
+
+
+@pytest.fixture(scope="module")
+def mult_stats():
+    return C.gen_multiplier(32).characterize()
+
+
+def E(stats, kb, m, discipline="list", mode="physical"):
+    t = SramTopology(kb, m)
+    return evaluate(schedule_stats(stats, t, discipline=discipline), t, EM, mode=mode)
+
+
+def test_topology_library():
+    assert len(TOPOLOGY_LIBRARY) == 12
+    assert {t.macro_kb for t in TOPOLOGY_LIBRARY} == set(MACRO_SIZES_KB)
+    assert {t.n_macros for t in TOPOLOGY_LIBRARY} == set(MACRO_COUNTS)
+    t8 = SramTopology(8, 1)
+    assert t8.rows == 256 and t8.cols == 256  # Table II (256x256) = 8KB
+    assert t8.ops_per_cycle_per_macro == 128
+
+
+def test_macro_doubling_energy_drop(mult_stats):
+    """Paper: ~47% energy reduction going 4KB -> 8KB single macro."""
+    e4, e8 = E(mult_stats, 4, 1), E(mult_stats, 8, 1)
+    drop = 1 - e8.energy_nj / e4.energy_nj
+    assert 0.30 <= drop <= 0.60, drop
+
+
+def test_three_macro_vs_single(mult_stats):
+    """Paper: 3-macro ~39% lower energy, ~38% lower latency."""
+    e1, e3 = E(mult_stats, 4, 1), E(mult_stats, 4, 3)
+    d_e = 1 - e3.energy_nj / e1.energy_nj
+    d_t = 1 - e3.latency_ns / e1.latency_ns
+    assert 0.25 <= d_e <= 0.65, d_e
+    assert 0.25 <= d_t <= 0.70, d_t
+
+
+def test_six_macro_latency(mult_stats):
+    """Paper: 6-macro ~47% lower latency than 3-macro.  (Its +15% energy
+    claim conflicts with its own cycle claim — see DESIGN.md; we assert
+    only the latency direction.)"""
+    e3, e6 = E(mult_stats, 4, 3), E(mult_stats, 4, 6)
+    assert e6.latency_ns < e3.latency_ns
+
+
+def test_large_three_macro_saving(mult_stats):
+    """Paper Table I flavor: 3x16KB vs 1x4KB saves >= 50%."""
+    e41, e163 = E(mult_stats, 4, 1), E(mult_stats, 16, 3)
+    assert 1 - e163.energy_nj / e41.energy_nj >= 0.5
+
+
+def test_headline_six_topology_saving(mult_stats):
+    """Abstract: six-topology implementation reduces energy vs the
+    single-macro baseline (80.9% claimed on recipe-swept benchmarks;
+    topology-only on one circuit must still clear 50%)."""
+    e41 = E(mult_stats, 4, 1)
+    best6 = min(E(mult_stats, kb, 6).energy_nj for kb in MACRO_SIZES_KB)
+    assert 1 - best6 / e41.energy_nj >= 0.5
+
+
+def test_table2_metrics_in_paper_range():
+    """8KB single macro: 88.2-106.6 GOPS, 8.64-10.45 TOPS/W (Table II)."""
+    t8 = SramTopology(8, 1)
+    m_nand = table2_metrics(t8, EM, nor_fraction=0.0)
+    m_nor = table2_metrics(t8, EM, nor_fraction=1.0)
+    assert 80 <= m_nor["throughput_gops"] <= 115
+    assert 80 <= m_nand["throughput_gops"] <= 115
+    lo = min(m_nand["tops_per_watt"], m_nor["tops_per_watt"])
+    hi = max(m_nand["tops_per_watt"], m_nor["tops_per_watt"])
+    assert 6.0 <= lo <= 12.0
+    assert 8.0 <= hi <= 16.0
+    dens = table2_metrics(t8, EM, nor_fraction=0.5)["gops_per_mm2"]
+    assert 400 <= dens <= 900  # paper: 551-666
+
+
+def test_paper_mode_power_formula(mult_stats):
+    met = E(mult_stats, 8, 1, discipline="levels", mode="paper")
+    assert abs(met.power_mw - EM.alpha_mw_per_level * mult_stats.n_levels) < 1e-6
+
+
+def test_capacity_constraint():
+    st = C.gen_multiplier(16).characterize()  # ~5k gates -> 20k bits needed
+    t = SramTopology(4, 1)  # 32k bits
+    sched = schedule_stats(st, t)
+    assert sched.fits
+    big = C.gen_multiplier(32).characterize()  # ~21k gates -> 84k bits
+    assert not schedule_stats(big, SramTopology(4, 1)).fits
+    assert schedule_stats(big, SramTopology(16, 1)).fits
+
+
+def test_inductor_sizing():
+    l4 = inductor_size_nh(SramTopology(4, 1), EM)
+    l32 = inductor_size_nh(SramTopology(32, 1), EM)
+    assert l4 > 0 and l32 > 0
+    # more bitline capacitance -> smaller inductor at fixed f_res
+    assert l32 < l4
+
+
+def test_explore_algorithm_one():
+    res = explore(C.gen_adder(32), recipes=[("Ba",), ("Rw",), ("Rw", "Ba")])
+    assert res.best.schedule.fits
+    assert res.inductor_nh > 0
+    assert res.n_recipes == 4  # 3 + implicit baseline ()
+    # full sweep covers all 12 topologies x 4 recipes
+    assert len(res.evaluations) == 48
+    b, w = best_worst(res)
+    assert b.metrics.energy_nj <= w.metrics.energy_nj
+    row = res.table_row()
+    assert row["benchmark"] == "adder-32"
+    assert row["energy_nj"] > 0
+
+
+def test_explore_respects_latency_constraint():
+    rtl = C.gen_adder(32)
+    free = explore(rtl, recipes=[("Ba",)])
+    tight = explore(rtl, recipes=[("Ba",)],
+                    max_latency_ns=free.best.metrics.latency_ns * 0.9)
+    assert tight.best.metrics.latency_ns <= free.best.metrics.latency_ns * 1.0001
+
+
+def test_peak_throughput_scales():
+    assert peak_throughput_gops(SramTopology(8, 3)) == pytest.approx(
+        3 * peak_throughput_gops(SramTopology(8, 1))
+    )

@@ -1,0 +1,59 @@
+"""Trip-count-corrected HLO parsing, validated on hand-countable programs.
+
+These compile tiny programs for the default (1-device CPU) backend — no
+512-device env needed.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hloparse import analyze
+
+M, K = 64, 32
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_matmul_flops_exact():
+    hlo = _hlo(lambda a, b: a @ b, jnp.zeros((M, K)), jnp.zeros((K, 2 * M)))
+    c = analyze(hlo)
+    assert c.flops == pytest.approx(2 * M * K * 2 * M)
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def step(x, w):
+        return x @ w, ()
+
+    hlo = _hlo(lambda x, ws: jax.lax.scan(step, x, ws)[0],
+               jnp.zeros((M, K)), jnp.zeros((10, K, K)))
+    c = analyze(hlo)
+    assert c.flops == pytest.approx(10 * 2 * M * K * K)
+    assert 10 in c.trip_counts.values()
+
+
+def test_nested_scan_multiplicity():
+    def inner(x, w):
+        return x @ w, ()
+
+    def outer(x, ws):
+        return jax.lax.scan(inner, x, ws)[0], ()
+
+    hlo = _hlo(lambda x, ws: jax.lax.scan(outer, x, ws)[0],
+               jnp.zeros((M, K)), jnp.zeros((4, 5, K, K)))
+    c = analyze(hlo)
+    assert c.flops == pytest.approx(4 * 5 * 2 * M * K * K)
+
+
+def test_hbm_proxy_positive_and_scales_with_trips():
+    def step(x, w):
+        return x @ w, ()
+
+    h1 = _hlo(lambda x, ws: jax.lax.scan(step, x, ws)[0],
+              jnp.zeros((M, K)), jnp.zeros((2, K, K)))
+    h2 = _hlo(lambda x, ws: jax.lax.scan(step, x, ws)[0],
+              jnp.zeros((M, K)), jnp.zeros((20, K, K)))
+    c1, c2 = analyze(h1), analyze(h2)
+    assert c2.hbm_bytes > 4 * c1.hbm_bytes  # ~10x more loop traffic

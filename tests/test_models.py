@@ -1,0 +1,194 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models.config import SHAPES, ParallelConfig
+from repro.models.model import Model, build_segments
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b, s, key=KEY, train=True):
+    batch = dict(tokens=jax.random.randint(key, (b, s), 0, cfg.vocab_size))
+    if train:
+        batch["labels"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        batch["mask"] = jnp.ones((b, s), jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(key, (b, cfg.enc_seq, cfg.d_model))
+    if cfg.n_patches:
+        batch["patches"] = jax.random.normal(key, (b, cfg.n_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one train step on CPU: shapes + no NaNs (deliverable f)."""
+    cfg = smoke_config(arch)
+    m = Model(cfg, ParallelConfig(scan_layers=True), q_chunk=8, kv_chunk=8)
+    params = m.init(KEY)
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    logits, aux = jax.jit(m.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    from repro.optim.adamw import AdamWConfig, adamw_init, constant_schedule
+    from repro.train.steps import make_train_step
+
+    opt_cfg = AdamWConfig()
+    opt = adamw_init(params, opt_cfg)
+    step = jax.jit(make_train_step(m, constant_schedule(1e-3), opt_cfg))
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, new_params)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Serving correctness: prefill+decode logits == teacher-forced forward."""
+    cfg = smoke_config(arch)
+    m = Model(cfg, ParallelConfig(scan_layers=True), compute_dtype=jnp.float32,
+              q_chunk=8, kv_chunk=8)
+    params = m.init(KEY)
+    B, S, P = 2, 24, 16
+    off = cfg.n_patches or 0
+    batch = make_batch(cfg, B, S, train=False)
+    toks = batch["tokens"]
+    full_logits, _ = jax.jit(m.forward)(params, batch)
+
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :P]
+    last_logits, caches = jax.jit(m.prefill)(params, pre)
+
+    from repro.serve.engine import align_prefill_caches
+
+    caches = align_prefill_caches(m, caches, P + off, S + off, batch=B)
+    assert np.abs(np.asarray(last_logits) - np.asarray(full_logits[:, P - 1])).max() < 2e-3
+
+    decode = jax.jit(m.decode_step)
+    worst, cur = 0.0, caches
+    for t in range(P, S):
+        lg, cur = decode(params, cur, toks[:, t], jnp.int32(off + t))
+        worst = max(worst, np.abs(np.asarray(lg) - np.asarray(full_logits[:, t])).max())
+    assert worst < 5e-3, (arch, worst)
+
+
+def test_segments_cover_all_layers():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        segs = build_segments(cfg)
+        total = sum(len(s.kinds) * s.n_groups for s in segs)
+        assert total == cfg.n_layers, arch
+
+
+def test_exact_assigned_configs():
+    """The full configs match the assignment card exactly."""
+    card = {
+        "mamba2-780m": (48, 1536, 50_280),
+        "minicpm-2b": (40, 2304, 122_753),
+        "qwen1.5-4b": (40, 2560, 151_936),
+        "gemma3-27b": (62, 5376, 262_144),
+        "deepseek-coder-33b": (62, 7168, 32_256),
+        "whisper-tiny": (4, 384, 51_865),
+        "recurrentgemma-9b": (38, 4096, 256_000),
+        "internvl2-2b": (24, 2048, 92_553),
+        "deepseek-moe-16b": (28, 2048, 102_400),
+        "moonshot-v1-16b-a3b": (48, 2048, 163_840),
+    }
+    for arch, (nl, dm, v) in card.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.vocab_size) == (nl, dm, v), arch
+    assert get_config("qwen1.5-4b").qkv_bias
+    assert get_config("gemma3-27b").pattern.count("local") == 5
+    assert get_config("deepseek-moe-16b").n_experts == 64
+    assert get_config("deepseek-moe-16b").top_k == 6
+    assert get_config("deepseek-moe-16b").n_shared_experts == 2
+    assert get_config("mamba2-780m").ssm_state == 128
+    assert get_config("recurrentgemma-9b").pattern == ("rglru", "rglru", "local")
+    assert get_config("whisper-tiny").is_encoder_decoder
+
+
+def test_vocab_padding_semantics():
+    """Padded logit rows must never win argmax / affect softmax."""
+    import dataclasses
+
+    cfg = dataclasses.replace(smoke_config("minicpm-2b"), vocab_pad_multiple=128)
+    assert cfg.padded_vocab == 512  # 512 already multiple of 128
+    cfg = dataclasses.replace(cfg, vocab_size=500)
+    assert cfg.padded_vocab == 512
+    m = Model(cfg, ParallelConfig())
+    params = m.init(KEY)
+    batch = make_batch(cfg, 2, 8, train=False)
+    logits, _ = jax.jit(m.forward)(params, batch)
+    assert logits.shape[-1] == 512
+    assert np.asarray(logits[..., 500:]).max() <= -1e29
+    assert (np.asarray(jnp.argmax(logits, -1)) < 500).all()
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+def test_ssd_gradient_finite_regression():
+    """Regression: where(tri, exp(seg), 0) overflowed on the masked upper
+    triangle and produced inf*0 = NaN gradients (the where-grad trap)."""
+    cfg = smoke_config("mamba2-780m")
+    m = Model(cfg, ParallelConfig(scan_layers=True))
+    params = m.init(KEY)
+    batch = make_batch(cfg, 2, 16)
+    (_, _), grads = jax.value_and_grad(m.loss_fn, has_aux=True)(params, batch)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert np.isfinite(np.asarray(g, np.float32)).all(), path
+
+
+@pytest.mark.parametrize("plen", [8, 16, 20, 24])
+def test_ring_cache_alignment_property(plen):
+    """Local-attention ring cache: decode must match forward for prompt
+    lengths below, at, and above the window (alignment/rotation paths)."""
+    cfg = smoke_config("gemma3-27b")  # window=16
+    m = Model(cfg, ParallelConfig(), compute_dtype=jnp.float32,
+              q_chunk=8, kv_chunk=8)
+    params = m.init(KEY)
+    B, S = 2, 28
+    batch = make_batch(cfg, B, S, train=False)
+    toks = batch["tokens"]
+    full_logits, _ = jax.jit(m.forward)(params, batch)
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :plen]
+    last_logits, caches = jax.jit(m.prefill)(params, pre)
+
+    from repro.serve.engine import align_prefill_caches
+
+    caches = align_prefill_caches(m, caches, plen, S, batch=B)
+    np.testing.assert_allclose(
+        np.asarray(last_logits), np.asarray(full_logits[:, plen - 1]), atol=2e-3
+    )
+    decode = jax.jit(m.decode_step)
+    cur = caches
+    for t in range(plen, S):
+        lg, cur = decode(params, cur, toks[:, t], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, t]), atol=5e-3
+        )
+
+
+def test_rglru_chunked_scan_equivalence():
+    """Hybrid chunked LRU scan == flat associative scan."""
+    import jax.numpy as jnp
+    from repro.models.ssm import _rglru_scan
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (2, 64, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(2, 64, 8)).astype(np.float32))
+    a_flat, h_flat = _rglru_scan(a, b, chunk=1024)  # falls back to flat
+    a_chk, h_chk = _rglru_scan(a, b, chunk=16)
+    np.testing.assert_allclose(np.asarray(h_flat), np.asarray(h_chk), rtol=2e-5, atol=1e-5)

@@ -1,0 +1,195 @@
+"""Substrate tests: optimizer, schedules, data pipeline, checkpointing,
+sharding rules, gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, wsd_schedule)
+
+
+# ------------------------------- optimizer ---------------------------------
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01, clip_norm=0.0)
+    params = dict(w=jnp.array([1.0, -2.0, 3.0]), b=jnp.array([[0.5, 0.5]]))
+    grads = dict(w=jnp.array([0.1, 0.2, -0.3]), b=jnp.array([[1.0, -1.0]]))
+    state = adamw_init(params, cfg)
+    lr = 0.1
+    new_p, new_s = adamw_update(grads, state, params, jnp.float32(lr), cfg)
+
+    def np_adamw(p, g):
+        m = 0.1 * g
+        v = 0.001 * g * g
+        mh = m / (1 - 0.9)
+        vh = v / (1 - 0.999)
+        return p - lr * (mh / (np.sqrt(vh) + 1e-8) + 0.01 * p)
+
+    for k in params:
+        np.testing.assert_allclose(
+            np.asarray(new_p[k]), np_adamw(np.asarray(params[k]), np.asarray(grads[k])),
+            rtol=1e-5,
+        )
+    assert int(new_s["step"]) == 1
+
+
+def test_clip_norm():
+    cfg = AdamWConfig(clip_norm=1.0, weight_decay=0.0)
+    params = dict(w=jnp.zeros(4))
+    grads = dict(w=jnp.full(4, 100.0))
+    state = adamw_init(params, cfg)
+    new_p, _ = adamw_update(grads, state, params, jnp.float32(1.0), cfg)
+    # post-clip grad norm is 1 -> adam direction magnitude ~1 per coord
+    assert np.all(np.abs(np.asarray(new_p["w"])) < 1.5)
+
+
+def test_wsd_schedule_shape():
+    f = wsd_schedule(1e-3, warmup_steps=10, stable_steps=80, decay_steps=10)
+    assert float(f(0)) == 0.0
+    assert float(f(5)) == pytest.approx(5e-4)
+    assert float(f(50)) == pytest.approx(1e-3)
+    assert float(f(89)) == pytest.approx(1e-3)
+    assert float(f(100)) == pytest.approx(1e-4, rel=0.01)  # final_frac=0.1
+    g = cosine_schedule(1e-3, 10, 100)
+    assert float(g(100)) == pytest.approx(1e-4, rel=0.01)
+
+
+def test_int8_error_feedback_compression():
+    cfg = AdamWConfig(compression="int8_ef", clip_norm=0.0, weight_decay=0.0)
+    params = dict(w=jnp.zeros(1000))
+    state = adamw_init(params, cfg)
+    assert "ef" in state
+    rng = np.random.default_rng(0)
+    g_const = jnp.asarray(rng.normal(size=1000).astype(np.float32)) * 1e-3
+    # applying the same gradient repeatedly: error feedback keeps the mean
+    # applied update unbiased
+    p = params
+    for _ in range(20):
+        p, state = adamw_update(dict(w=g_const), state, p, jnp.float32(1e-2), cfg)
+    # direction should match the uncompressed run closely
+    cfg2 = AdamWConfig(compression="none", clip_norm=0.0, weight_decay=0.0)
+    p2, s2 = dict(w=jnp.zeros(1000)), adamw_init(params, cfg2)
+    for _ in range(20):
+        p2, s2 = adamw_update(dict(w=g_const), s2, p2, jnp.float32(1e-2), cfg2)
+    cos = np.dot(np.asarray(p["w"]), np.asarray(p2["w"])) / (
+        np.linalg.norm(np.asarray(p["w"])) * np.linalg.norm(np.asarray(p2["w"])) + 1e-12
+    )
+    assert cos > 0.99
+
+
+# --------------------------------- data ------------------------------------
+
+
+def test_data_determinism_and_host_disjointness():
+    cfg = DataConfig(batch_per_host=4, seq_len=32, vocab_size=1000, seed=3)
+    p0 = Pipeline(cfg, host=0, n_hosts=4)
+    p0b = Pipeline(cfg, host=0, n_hosts=4)
+    p1 = Pipeline(cfg, host=1, n_hosts=4)
+    b0 = p0.get_batch(7)
+    assert np.array_equal(b0["tokens"], p0b.get_batch(7)["tokens"])  # deterministic
+    assert not np.array_equal(b0["tokens"], p1.get_batch(7)["tokens"])  # disjoint
+    assert not np.array_equal(b0["tokens"], p0.get_batch(8)["tokens"])  # steps differ
+    assert b0["tokens"].shape == (4, 32)
+    assert (b0["tokens"] >= 0).all() and (b0["tokens"] < 1000).all()
+    assert np.array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+
+
+def test_memmap_source(tmp_path):
+    path = str(tmp_path / "tokens.bin")
+    data = np.arange(33 * 50, dtype=np.int32) % 777
+    data.tofile(path)
+    cfg = DataConfig(batch_per_host=2, seq_len=32, vocab_size=777, seed=0, path=path)
+    p = Pipeline(cfg, host=0, n_hosts=1)
+    b = p.get_batch(0)
+    assert b["tokens"].shape == (2, 32)
+    np.testing.assert_array_equal(b["tokens"][0], data[:32])
+
+
+# ------------------------------ checkpointing -------------------------------
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    from repro.ckpt.manager import CheckpointManager
+
+    tree = dict(a=jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                nested=dict(b=jnp.ones(4, jnp.bfloat16)),
+                step=jnp.int32(5))
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, tree)
+    assert mgr.steps() == [2, 3]  # keep-N GC
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, meta = mgr.restore(like)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+    assert meta["step"] == 3
+
+
+def test_checkpoint_atomicity(tmp_path):
+    from repro.ckpt.manager import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, dict(x=jnp.ones(3)))
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_checkpoint_restore_with_sharding(tmp_path):
+    """Elastic restore: apply a (new) sharding at load time."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.ckpt.manager import CheckpointManager
+
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = dict(w=jnp.arange(8, dtype=jnp.float32))
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, tree)
+    shard = dict(w=NamedSharding(mesh, P("data")))
+    restored, _ = mgr.restore(jax.tree.map(jnp.zeros_like, tree), shardings=shard)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding == shard["w"]
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    from repro.ckpt.manager import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, dict(w=jnp.ones(4)))
+    with pytest.raises(ValueError):
+        mgr.restore(dict(w=jnp.ones(5)))
+
+
+# ------------------------------- sharding ----------------------------------
+
+
+def test_spec_divisibility_fallback():
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import spec_for
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = {"mlp": ["model"], "embed": [("data",)]}
+    # mesh axes of size 1 -> everything replicated
+    assert spec_for(mesh, (64, 128), ("embed", "mlp"), rules) == P()
+
+
+def test_rules_for_model_head_divisibility():
+    import os
+
+    from repro.models.config import ParallelConfig
+    from repro.parallel.sharding import rules_for_model
+    from repro.configs import get_config
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    # n_heads % 1 == 0 always; fabricate a non-divisible case via msize=1
+    # (structural check only: rules dict has the expected keys)
+    pc = ParallelConfig()
+    rules = rules_for_model(get_config("minicpm-2b"), pc, mesh)
+    for k in ("vocab", "qkv", "kv_seq", "act_heads", "experts"):
+        assert k in rules

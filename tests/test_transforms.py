@@ -1,0 +1,140 @@
+"""Property tests: the four ABC-style transforms preserve semantics."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import circuits as C
+from repro.core.aig import random_aig
+from repro.core.transforms import (
+    RecipeRunner,
+    _cofactors,
+    _cover_tt,
+    _isop,
+    _tt_mask,
+    apply_recipe,
+    balance,
+    enumerate_recipes,
+    refactor,
+    resub,
+    rewrite,
+    synth_plan,
+    build_plan,
+)
+
+TRANSFORMS = [balance, rewrite, refactor, resub]
+rng = np.random.default_rng(42)
+
+
+def equivalent(a, b, n_words=8) -> bool:
+    if a.n_pis != b.n_pis or len(a.pos) != len(b.pos):
+        return False
+    pv = rng.integers(0, 1 << 63, size=(a.n_pis, n_words), dtype=np.int64).astype(np.uint64)
+    return np.array_equal(a.simulate(pv), b.simulate(pv))
+
+
+def exhaustive_equivalent(a, b) -> bool:
+    """Exact check for <= 10 PIs via all input patterns."""
+    from repro.core.aig import _elementary_tables
+
+    k = a.n_pis
+    assert k <= 10
+    pv = _elementary_tables(k)
+    words = pv.shape[1]
+    return np.array_equal(a.simulate(pv), b.simulate(pv))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_pis=st.integers(4, 9),
+    n_ands=st.integers(10, 150),
+    n_pos=st.integers(1, 6),
+    seed=st.integers(0, 10**6),
+    which=st.integers(0, 3),
+)
+def test_transform_preserves_function_exact(n_pis, n_ands, n_pos, seed, which):
+    a = random_aig(n_pis, n_ands, n_pos, seed=seed)
+    b = TRANSFORMS[which](a)
+    assert exhaustive_equivalent(a, b), TRANSFORMS[which].__name__
+
+
+@pytest.mark.parametrize("fn", TRANSFORMS)
+@pytest.mark.parametrize(
+    "gen", [lambda: C.gen_adder(16), lambda: C.gen_multiplier(8),
+            lambda: C.gen_max(8, 4), lambda: C.gen_sine(8)],
+    ids=["adder16", "mult8", "max8", "sine8"],
+)
+def test_transform_on_circuits(fn, gen):
+    a = gen()
+    b = fn(a)
+    assert equivalent(a, b), fn.__name__
+    assert b.n_ands <= a.n_ands * 1.05 + 4  # never blows up
+
+
+def test_recipe_count():
+    rs = enumerate_recipes()
+    assert len(rs) == 64  # sum_{i=1..4} P(4,i) = 4+12+24+24
+    assert len(set(rs)) == 64
+
+
+def test_recipe_prefix_cache_consistent():
+    a = C.gen_adder(12)
+    runner = RecipeRunner(a)
+    direct = apply_recipe(a, ("Ba", "Rw", "Rs"))
+    cached = runner.run(("Ba", "Rw", "Rs"))
+    # same prefix path -> identical results from the runner
+    assert equivalent(direct, cached)
+    assert equivalent(a, cached)
+
+
+def test_all_recipes_equivalent_small():
+    a = C.gen_max(6, 3)
+    runner = RecipeRunner(a)
+    for r in enumerate_recipes():
+        assert exhaustive_equivalent(a, runner.run(r)) if a.n_pis <= 10 else equivalent(a, runner.run(r)), r
+
+
+def test_rewrite_reduces_redundant():
+    a = random_aig(8, 300, 4, seed=9)
+    b = rewrite(a)
+    assert b.n_ands <= a.n_ands
+
+
+# --------------------------- truth-table machinery -------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(k=st.integers(1, 7), tt=st.integers(0, 2**63 - 1), i=st.integers(0, 6))
+def test_cofactors_brute(k, tt, i):
+    if i >= k:
+        i = i % k
+    tt &= _tt_mask(k)
+    neg, pos = _cofactors(tt, i, k)
+    bneg = bpos = 0
+    for p in range(1 << k):
+        bpos |= ((tt >> (p | (1 << i))) & 1) << p
+        bneg |= ((tt >> (p & ~(1 << i))) & 1) << p
+    assert (neg, pos) == (bneg, bpos)
+
+
+@settings(max_examples=80, deadline=None)
+@given(k=st.integers(1, 7), tt=st.integers(0, 2**63 - 1))
+def test_isop_covers_exactly(k, tt):
+    tt &= _tt_mask(k)
+    cubes = _isop(tt, _tt_mask(k), k)
+    assert _cover_tt(cubes, k) == tt
+
+
+@settings(max_examples=60, deadline=None)
+@given(k=st.integers(1, 4), tt=st.integers(0, 2**16 - 1))
+def test_synth_plan_correct(k, tt):
+    from repro.core.aig import Aig, lit
+
+    tt &= _tt_mask(k)
+    cost, plan = synth_plan(tt, k)
+    aig = Aig(k)
+    out = build_plan(aig, plan, [lit(i + 1) for i in range(k)])
+    aig.add_po(out)
+    got = aig.truth_table(out, list(range(1, k + 1)))
+    assert got == tt
+    assert cost >= 0

@@ -1,0 +1,141 @@
+"""Exploration-backend benchmark: scalar python loop vs tensorized jax grid.
+
+Times the back half of Algorithm I (schedule -> evaluate -> filter over the
+full recipe x topology grid) with the characterization front half hoisted
+out and shared, so the numbers isolate exactly what `core/batch.py`
+tensorizes.  Also cross-checks that both backends pick the identical best
+implementation per circuit.
+
+    PYTHONPATH=src python -m benchmarks.bench_explorer                # 9 circuits, 65 recipes
+    PYTHONPATH=src python -m benchmarks.bench_explorer --smoke        # CI: 4 circuits, 9 recipes
+    PYTHONPATH=src python -m benchmarks.bench_explorer --scale default
+
+Emits ``BENCH_explorer.json``: per-circuit wall times for both backends,
+the speedup, and suite aggregates.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import circuits as C
+from repro.core.explorer import characterize_recipes, explore
+from repro.core.transforms import enumerate_recipes
+
+from .common import Csv, timeit
+
+SMOKE_CIRCUITS = ("adder", "bar", "sqrt", "max")
+SMOKE_RECIPES = 8
+
+
+def run(
+    csv: Csv | None = None,
+    scale: str = "tiny",
+    n_recipes: int | None = None,
+    only=None,
+    n_iter: int = 3,
+    out_json: str = "BENCH_explorer.json",
+    mode: str = "physical",
+) -> dict:
+    csv = csv or Csv()
+    recipes = enumerate_recipes()
+    if n_recipes is not None:
+        recipes = recipes[:n_recipes]
+    suite = C.benchmark_suite(scale=scale, only=only)
+
+    per_circuit = {}
+    totals = dict(python_us=0.0, jax_us=0.0, cha_s=0.0, implementations=0)
+    for name, rtl in suite.items():
+        t0 = time.time()
+        cha = characterize_recipes(rtl, recipes)
+        cha_s = time.time() - t0
+
+        t_py = timeit(
+            lambda: explore(rtl, cha=cha, mode=mode, backend="python"),
+            n_warmup=1, n_iter=n_iter,
+        )
+        t_jx = timeit(
+            lambda: explore(rtl, cha=cha, mode=mode, backend="jax"),
+            n_warmup=1, n_iter=n_iter,
+        )
+        res_py = explore(rtl, cha=cha, mode=mode, backend="python")
+        res_jx = explore(rtl, cha=cha, mode=mode, backend="jax")
+        agree = (
+            res_py.best.recipe == res_jx.best.recipe
+            and res_py.best.topo == res_jx.best.topo
+            and abs(res_py.best.metrics.energy_nj - res_jx.best.metrics.energy_nj)
+            < 1e-6
+        )
+        speedup = t_py / t_jx if t_jx > 0 else float("inf")
+        per_circuit[name] = dict(
+            gates=res_py.best.stats.total_gates,
+            implementations=res_py.n_evaluations,
+            characterize_s=round(cha_s, 3),
+            python_us=round(t_py, 1),
+            jax_us=round(t_jx, 1),
+            speedup=round(speedup, 2),
+            best=dict(
+                topo=res_jx.best.topo.name,
+                recipe=",".join(res_jx.best.recipe) or "-",
+                energy_nj=res_jx.best.metrics.energy_nj,
+            ),
+            backends_agree=agree,
+        )
+        totals["python_us"] += t_py
+        totals["jax_us"] += t_jx
+        totals["cha_s"] += cha_s
+        totals["implementations"] += res_py.n_evaluations
+        csv.add(
+            f"explorer/{name}", t_jx,
+            f"python_us={t_py:.0f};jax_us={t_jx:.0f};"
+            f"speedup={speedup:.1f}x;agree={agree}",
+        )
+
+    suite_speedup = (
+        totals["python_us"] / totals["jax_us"] if totals["jax_us"] else 0.0
+    )
+    out = dict(
+        scale=scale,
+        n_recipes=len(recipes) + 1,  # + baseline ()
+        n_circuits=len(suite),
+        per_circuit=per_circuit,
+        total=dict(
+            implementations=totals["implementations"],
+            characterize_s=round(totals["cha_s"], 3),
+            python_us=round(totals["python_us"], 1),
+            jax_us=round(totals["jax_us"], 1),
+            speedup=round(suite_speedup, 2),
+            all_agree=all(c["backends_agree"] for c in per_circuit.values()),
+        ),
+    )
+    with open(out_json, "w") as f:
+        json.dump(out, f, indent=1)
+    csv.add(
+        "explorer/TOTAL", totals["jax_us"],
+        f"python_us={totals['python_us']:.0f};jax_us={totals['jax_us']:.0f};"
+        f"speedup={suite_speedup:.1f}x;json={out_json}",
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["tiny", "default", "paper"], default="tiny")
+    ap.add_argument("--recipes", type=int, default=None,
+                    help="limit recipe count (default: all 64)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: few circuits, few recipes, 1 iter")
+    ap.add_argument("--out", default="BENCH_explorer.json")
+    args = ap.parse_args()
+    kw = dict(scale=args.scale, n_recipes=args.recipes, out_json=args.out)
+    if args.smoke:
+        kw.update(scale="tiny", n_recipes=SMOKE_RECIPES, only=SMOKE_CIRCUITS,
+                  n_iter=1)
+    print("name,us_per_call,derived")
+    run(**kw)
+
+
+if __name__ == "__main__":
+    main()

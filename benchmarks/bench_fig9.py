@@ -11,6 +11,11 @@ decoupled so the sweep stays CPU-tractable):
      transforms) swept over the 12 topologies.  This is the width-bound
      regime where Fig 9's claims live: 3-macro vs 1-macro energy (-39%),
      macro-doubling energy drop (-47%), 6-macro latency (-66% vs single).
+
+Both sections consume the batched exploration grid (core/batch.py): the
+recipe sweep runs ``explore(backend="jax")`` and reads the
+``ExplorationGrid``; the topology trends are one ``evaluate_batch`` call
+per circuit instead of 12 scalar schedule/evaluate pairs.
 """
 
 from __future__ import annotations
@@ -18,29 +23,36 @@ from __future__ import annotations
 import time
 
 from repro.core import circuits as C
+from repro.core.batch import TopologyTable, WorkloadTable, evaluate_batch
 from repro.core.explorer import explore
 from repro.core.mapping import schedule_stats
-from repro.core.sram import MACRO_SIZES_KB, EnergyModel, SramTopology, evaluate
+from repro.core.sram import (
+    MACRO_SIZES_KB,
+    TOPOLOGY_LIBRARY,
+    EnergyModel,
+    SramTopology,
+    evaluate,
+)
 
 from .common import Csv
 
 
-def run(csv: Csv, scale: str = "tiny", recipes=None) -> dict:
+def run(csv: Csv, scale: str = "tiny", recipes=None, backend: str = "jax") -> dict:
     results = {}
     # ---- section A: recipe sweep -----------------------------------------
     suite = C.benchmark_suite(scale=scale)
     total = 0
     for name, rtl in suite.items():
         t0 = time.time()
-        res = explore(rtl, recipes=recipes)
+        res = explore(rtl, recipes=recipes, backend=backend)
         dt = (time.time() - t0) * 1e6
         results[name] = res
-        total += len(res.evaluations)
-        es = [ev.metrics.energy_nj for ev in res.evaluations if ev.schedule.fits]
-        spread = (max(es) / min(es)) if es else 0.0
+        total += res.n_evaluations
+        es = res.sweep_energies(fits_only=True)
+        spread = (float(es.max()) / float(es.min())) if es.size else 0.0
         csv.add(
             f"fig9/recipes/{name}", dt,
-            f"impls={len(res.evaluations)};best={res.best.topo.name}"
+            f"impls={res.n_evaluations};best={res.best.topo.name}"
             f"({','.join(res.best.recipe) or '-'});"
             f"energy_spread={spread:.1f}x",
         )
@@ -49,26 +61,43 @@ def run(csv: Csv, scale: str = "tiny", recipes=None) -> dict:
 
     # ---- section B: topology trends at paper scale -------------------------
     em = EnergyModel()
+    topo_table = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    topo_index = {
+        (t.macro_kb, t.n_macros): i for i, t in enumerate(TOPOLOGY_LIBRARY)
+    }
     trends = dict(d3m=[], d48=[], lat6=[], best6=[])
     for name, rtl in C.benchmark_suite(scale="paper").items():
         st = rtl.characterize()
+        if backend == "jax":
+            # One jitted pass over all 12 topologies for this circuit.
+            grid = evaluate_batch(
+                WorkloadTable.from_stats([((), st)]), topo_table, em
+            )
 
-        def met(kb, m):
-            t = SramTopology(kb, m)
-            return evaluate(schedule_stats(st, t), t, em)
+            def met(kb, m):
+                i = topo_index[(kb, m)]
+                return float(grid.energy_nj[i, 0]), float(grid.latency_ns[i, 0])
+        else:
+            def met(kb, m):
+                t = SramTopology(kb, m)
+                ref = evaluate(schedule_stats(st, t), t, em)
+                return ref.energy_nj, ref.latency_ns
 
-        e41, e81 = met(4, 1), met(8, 1)
-        d48 = 100 * (1 - e81.energy_nj / e41.energy_nj)
+        def e(kb, m):
+            return met(kb, m)[0]
+
+        def lat(kb, m):
+            return met(kb, m)[1]
+
+        d48 = 100 * (1 - e(8, 1) / e(4, 1))
         d3m = sum(
-            100 * (1 - met(kb, 3).energy_nj / met(kb, 1).energy_nj)
-            for kb in MACRO_SIZES_KB
+            100 * (1 - e(kb, 3) / e(kb, 1)) for kb in MACRO_SIZES_KB
         ) / len(MACRO_SIZES_KB)
         lat6 = sum(
-            100 * (1 - met(kb, 6).latency_ns / met(kb, 1).latency_ns)
-            for kb in MACRO_SIZES_KB
+            100 * (1 - lat(kb, 6) / lat(kb, 1)) for kb in MACRO_SIZES_KB
         ) / len(MACRO_SIZES_KB)
         best6 = 100 * (
-            1 - min(met(kb, 6).energy_nj for kb in MACRO_SIZES_KB) / e41.energy_nj
+            1 - min(e(kb, 6) for kb in MACRO_SIZES_KB) / e(4, 1)
         )
         for k, v in zip(("d3m", "d48", "lat6", "best6"), (d3m, d48, lat6, best6)):
             trends[k].append(v)

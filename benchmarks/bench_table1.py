@@ -11,13 +11,14 @@ from repro.core.explorer import best_worst, explore
 from .common import Csv
 
 
-def run(csv: Csv, scale: str = "tiny", recipes=None) -> list[dict]:
+def run(csv: Csv, scale: str = "tiny", recipes=None, backend: str = "jax") -> list[dict]:
     suite = C.benchmark_suite(scale=scale)
     rows = []
     savings = []
     for name, rtl in suite.items():
         t0 = time.time()
-        res = explore(rtl, recipes=recipes)
+        # Batched grid sweep; best_worst runs the shared filter/argmin on it.
+        res = explore(rtl, recipes=recipes, backend=backend)
         b, w = best_worst(res)
         dt = (time.time() - t0) * 1e6
         saving = 100 * (1 - b.metrics.energy_nj / w.metrics.energy_nj)

@@ -1,10 +1,14 @@
 """Table II — architecture comparison: throughput (GOPS), energy efficiency
 (TOPS/W), compute density (GOPS/mm^2) for the rCiM topologies vs published
-prior-work numbers (normalized to 8KB as in the paper)."""
+prior-work numbers (normalized to 8KB as in the paper).
+
+Consumes the batched engine: all topologies are evaluated per NAND/NOR mix
+in one ``table2_batch`` array pass over a ``TopologyTable``."""
 
 from __future__ import annotations
 
-from repro.core.sram import EnergyModel, SramTopology, table2_metrics
+from repro.core.batch import TopologyTable, table2_batch
+from repro.core.sram import EnergyModel, SramTopology
 
 from .common import Csv
 
@@ -27,17 +31,18 @@ PAPER_SELF = {
 def run(csv: Csv) -> list[dict]:
     em = EnergyModel()
     rows = []
-    topologies = [
-        ("(256x256)x1", SramTopology(8, 1)),
-        ("(256x256)x3", SramTopology(8, 3)),
-        ("(512x256)x3", SramTopology(16, 3)),
-    ]
-    for label, topo in topologies:
-        m_nand = table2_metrics(topo, em, nor_fraction=0.0)
-        m_nor = table2_metrics(topo, em, nor_fraction=1.0)
-        gops = (m_nor["throughput_gops"], m_nand["throughput_gops"])
-        topsw = (m_nor["tops_per_watt"], m_nand["tops_per_watt"])
-        dens = table2_metrics(topo, em, nor_fraction=0.5)["gops_per_mm2"]
+    labels = ["(256x256)x1", "(256x256)x3", "(512x256)x3"]
+    table = TopologyTable.from_topologies(
+        [SramTopology(8, 1), SramTopology(8, 3), SramTopology(16, 3)]
+    )
+    # One vectorized pass per NAND/NOR mix over the whole topology table.
+    m_nand = table2_batch(table, em, nor_fraction=0.0)
+    m_nor = table2_batch(table, em, nor_fraction=1.0)
+    m_mix = table2_batch(table, em, nor_fraction=0.5)
+    for i, label in enumerate(labels):
+        gops = (m_nor["throughput_gops"][i], m_nand["throughput_gops"][i])
+        topsw = (m_nor["tops_per_watt"][i], m_nand["tops_per_watt"][i])
+        dens = m_mix["gops_per_mm2"][i]
         want = PAPER_SELF[label]
         rows.append(dict(topo=label, gops=gops, tops_w=topsw, gops_mm2=dens))
         csv.add(
@@ -47,7 +52,7 @@ def run(csv: Csv) -> list[dict]:
             f"GOPS/mm2={dens:.0f}",
         )
     # headline ratios vs prior work (8KB single macro)
-    m = table2_metrics(SramTopology(8, 1), em, nor_fraction=0.5)
+    m = {k: v[0] for k, v in m_mix.items()}
     isscc = PRIOR_WORK["ISSCC19_8T"]
     csv.add(
         "table2/vs_ISSCC19", 0.0,

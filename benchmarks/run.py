@@ -16,10 +16,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=["tiny", "default", "paper"], default="tiny")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig9,table1,table2,variation,kernel,roofline")
+                    help="comma list: fig9,table1,table2,variation,kernel,"
+                         "roofline,explorer")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
-        "fig9", "table1", "table2", "variation", "kernel", "roofline"
+        "fig9", "table1", "table2", "variation", "kernel", "roofline",
+        "explorer",
     }
 
     from .common import Csv
@@ -50,6 +52,10 @@ def main() -> None:
         from . import bench_roofline
 
         bench_roofline.run(csv)
+    if "explorer" in which:
+        from . import bench_explorer
+
+        bench_explorer.run(csv, scale=args.scale)
     csv.save("bench.csv")
 
 

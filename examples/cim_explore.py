@@ -19,16 +19,19 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--scale", choices=["tiny", "default", "paper"], default="tiny")
     ap.add_argument("--max-latency-ns", type=float, default=None)
+    ap.add_argument("--backend", choices=["python", "jax"], default="jax",
+                    help="sweep backend: scalar reference or batched grid")
     args = ap.parse_args()
 
     names = list(C._GENERATORS) if (args.all or args.circuit == "all") else [args.circuit]
     suite = C.benchmark_suite(scale=args.scale, only=names)
     for name, rtl in suite.items():
-        res = explore(rtl, max_latency_ns=args.max_latency_ns)
+        res = explore(rtl, max_latency_ns=args.max_latency_ns,
+                      backend=args.backend)
         b, w = best_worst(res)
         row = res.table_row()
         print(f"\n=== {name} ({rtl.n_ands} AIG nodes, {res.n_recipes} recipes, "
-              f"{len(res.evaluations)} implementations, {res.wall_s:.1f}s) ===")
+              f"{res.n_evaluations} implementations, {res.wall_s:.1f}s) ===")
         for k, v in row.items():
             print(f"  {k:14s} {v}")
         saving = 100 * (1 - b.metrics.energy_nj / w.metrics.energy_nj)

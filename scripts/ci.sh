@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + explorer-backend benchmark in smoke mode.
+#
+#   scripts/ci.sh            # tests + smoke bench
+#   scripts/ci.sh --no-bench # tests only
+#
+# Uses the PYTHONPATH=src layout (works without installation; `pip
+# install -e .` works too, see pyproject.toml).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== explorer backend bench (smoke) =="
+    python -m benchmarks.bench_explorer --smoke
+    python - <<'EOF'
+import json
+with open("BENCH_explorer.json") as f:
+    r = json.load(f)
+total = r["total"]
+assert total["all_agree"], "python/jax backends disagree on best implementation"
+print(f"suite sweep speedup: {total['speedup']}x "
+      f"(python {total['python_us']:.0f}us -> jax {total['jax_us']:.0f}us)")
+EOF
+fi
+echo "CI OK"

@@ -75,6 +75,17 @@ class AigStats:
             return 0
         return max(sum(d.values()) for d in self.ops_per_level)
 
+    def ops_matrix(self) -> np.ndarray:
+        """Per-level op counts as an ``(n_levels, 3)`` int array in
+        (nand, nor, inv) order — the row format the batched exploration
+        engine (core/batch.py) stacks into its workload tensor."""
+        out = np.zeros((len(self.ops_per_level), 3), dtype=np.int64)
+        for i, level in enumerate(self.ops_per_level):
+            out[i, 0] = level.get("nand", 0)
+            out[i, 1] = level.get("nor", 0)
+            out[i, 2] = level.get("inv", 0)
+        return out
+
 
 class Aig:
     """A mutable AIG with structural hashing.

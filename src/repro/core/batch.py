@@ -1,0 +1,485 @@
+"""Tensorized back half of Algorithm I — the rapid-assessment engine.
+
+The paper's headline claim is a *rapid assessment mechanism*: 6900+
+(recipe x topology) evaluations across the EPFL suite.  The scalar path
+(`mapping.schedule_stats` + `sram.evaluate` inside `explorer.explore`)
+walks that grid one Python dataclass at a time; this module batches it
+into a structure-of-arrays program so the whole
+ChaAIG -> Evaluate -> FilterEnergy sweep is one jitted `jax.numpy` pass:
+
+  * ``TopologyTable``  — the SRAM topology library stacked into arrays
+    (rows, cols, macro counts, total bits, sense-amp widths);
+  * ``WorkloadTable``  — the characterized recipes stacked into a
+    ``(n_recipes, n_levels, n_op_types)`` op-count tensor;
+  * ``schedule_batch`` — `mapping.schedule_stats` (both the "list" and
+    "levels" disciplines) over the full recipe x topology grid;
+  * ``evaluate_batch`` — `sram.evaluate` (both "paper" and "physical"
+    accounting modes) over the grid, yielding an ``ExplorationGrid``;
+  * ``select_best`` / ``select_best_worst`` — the shared capacity /
+    latency admissibility filter + energy argmin/argmax used by
+    `explorer`, `mesh_explorer`, and the benchmarks.
+
+Parity contract: every cycle/flag quantity is exact integer arithmetic,
+and the energy expressions are the *same functions* the scalar path uses
+(`sram.paper_power_mw` / `sram.physical_energy_nj`), evaluated in
+float64 via `jax.experimental.enable_x64`, so ``backend="jax"`` matches
+``backend="python"`` to float round-off.  Grid arrays are stored
+``(n_topologies, n_recipes)`` and flattened topology-major — the exact
+iteration order of the scalar loops — so argmin tie-breaking also
+matches.
+
+The jitted core recompiles per (grid shape, model, discipline, mode);
+``WorkloadTable`` pads the level axis to a multiple of 64 to keep the
+number of distinct shapes (and hence compiles) small across circuits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .aig import AigStats
+from .mapping import BITS_PER_GATE, MACROS_PER_TYPE
+from .sram import (
+    OP_TYPES,
+    EnergyModel,
+    SramTopology,
+    paper_energy_nj,
+    paper_power_mw,
+    physical_energy_nj,
+    table2_arrays,
+)
+
+# jax is imported lazily on the first batched call: the tables and
+# select_best/select_best_worst are pure numpy, and eager `import jax`
+# costs ~1s that numpy-only consumers (mesh_explorer, backend="python")
+# should not pay.
+jax = None
+jnp = None
+enable_x64 = None
+
+LEVEL_PAD = 64  # pad the level axis to multiples of this to bound recompiles
+
+
+def _load_jax() -> None:
+    global jax, jnp, enable_x64
+    if jnp is not None:
+        return
+    try:
+        import jax as _jax
+        import jax.numpy as _jnp
+        from jax.experimental import enable_x64 as _enable_x64
+    except Exception as e:  # pragma: no cover - container always ships jax
+        raise RuntimeError(
+            "the batched exploration engine requires jax; "
+            "use backend='python' instead"
+        ) from e
+    jax, jnp, enable_x64 = _jax, _jnp, _enable_x64
+
+
+# ---------------------------------------------------------------------------
+# Structure-of-arrays tables
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyTable:
+    """The SRAM topology library as stacked arrays (one row per topology)."""
+
+    topologies: tuple[SramTopology, ...]
+    rows: np.ndarray            # (T,)
+    cols: np.ndarray            # (T,)
+    n_macros: np.ndarray        # (T,)
+    total_bits: np.ndarray      # (T,)
+    ops_per_cycle: np.ndarray   # (T,) sense-amp slots per macro per cycle
+    macros_per_type: np.ndarray  # (T, 3) dedicated macros per op type
+    is_single: np.ndarray       # (T,) bool — time-multiplexed single macro
+
+    @classmethod
+    def from_topologies(cls, topos: Sequence[SramTopology]) -> "TopologyTable":
+        topos = tuple(topos)
+        if not topos:
+            raise ValueError("empty topology list")
+        for t in topos:
+            if t.n_macros not in MACROS_PER_TYPE:
+                raise ValueError(f"unsupported macro count {t.n_macros}")
+        return cls(
+            topologies=topos,
+            rows=np.array([t.rows for t in topos], dtype=np.int32),
+            cols=np.array([t.cols for t in topos], dtype=np.int32),
+            n_macros=np.array([t.n_macros for t in topos], dtype=np.int32),
+            total_bits=np.array([t.total_bits for t in topos], dtype=np.int32),
+            ops_per_cycle=np.array(
+                [t.ops_per_cycle_per_macro for t in topos], dtype=np.int32
+            ),
+            macros_per_type=np.array(
+                [MACROS_PER_TYPE[t.n_macros] for t in topos], dtype=np.int32
+            ),
+            is_single=np.array([t.n_macros == 1 for t in topos], dtype=bool),
+        )
+
+    def __len__(self) -> int:
+        return len(self.topologies)
+
+    def area_mm2(self, model: EnergyModel) -> np.ndarray:
+        return np.array([t.area_mm2(model) for t in self.topologies])
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadTable:
+    """Characterized recipes as a stacked op-count tensor.
+
+    ``ops[r, l, k]`` is the number of ops of type ``OP_TYPES[k]`` in gate-
+    netlist level ``l`` of recipe ``r``; levels beyond ``n_levels[r]`` are
+    zero padding (the schedule kernels mask them out).
+    """
+
+    recipes: tuple[tuple[str, ...], ...]
+    ops: np.ndarray        # (R, L_pad, 3)
+    n_levels: np.ndarray   # (R,)
+    op_totals: np.ndarray  # (R, 3)
+    gates: np.ndarray      # (R,)
+
+    @classmethod
+    def from_stats(
+        cls,
+        items: Mapping[tuple[str, ...], AigStats]
+        | Sequence[tuple[tuple[str, ...], AigStats]],
+        pad_levels_to: int = LEVEL_PAD,
+    ) -> "WorkloadTable":
+        if isinstance(items, Mapping):
+            items = list(items.items())
+        items = list(items)
+        if not items:
+            raise ValueError("empty workload list")
+        recipes = tuple(tuple(r) for r, _ in items)
+        n_levels = np.array([s.n_levels for _, s in items], dtype=np.int32)
+        max_l = int(n_levels.max(initial=1))
+        pad = max(pad_levels_to, 1)
+        l_pad = ((max(max_l, 1) + pad - 1) // pad) * pad
+        ops = np.zeros((len(items), l_pad, len(OP_TYPES)), dtype=np.int32)
+        for i, (_, s) in enumerate(items):
+            m = s.ops_matrix()
+            ops[i, : m.shape[0]] = m
+        op_totals = ops.sum(axis=1)
+        return cls(
+            recipes=recipes,
+            ops=ops,
+            n_levels=n_levels,
+            op_totals=op_totals,
+            gates=op_totals.sum(axis=1),
+        )
+
+    def __len__(self) -> int:
+        return len(self.recipes)
+
+
+# ---------------------------------------------------------------------------
+# Jitted grid kernels
+# ---------------------------------------------------------------------------
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def _schedule_core(ops, n_levels, width, mpt, is_single, total_bits, discipline):
+    """Shared schedule math; mirrors mapping.schedule_stats exactly.
+
+    Shapes: ops (R, L, 3); width (T,); mpt (T, 3); is_single (T,);
+    total_bits (T,).  Returns (cycles, active_macro_cycles, fits), each
+    (R, T) with integer dtype (bool for fits).
+    """
+    wt = width[None, :, None] * mpt[None, :, :]          # (1, T, 3)
+    tot = ops.sum(axis=1)                                # (R, 3)
+    gates = tot.sum(axis=-1)                             # (R,)
+
+    if discipline == "list":
+        # ASAP width-bound schedule: cycles = max(depth, width bound) + drain.
+        b = _ceil_div(tot[:, None, :], wt)               # (R, T, 3)
+        sum_b = b.sum(axis=-1)
+        max_b = b.max(axis=-1)
+        width_bound = jnp.where(is_single[None, :], sum_b, max_b)
+        active = jnp.where(
+            is_single[None, :], sum_b, (b * mpt[None, :, :]).sum(axis=-1)
+        )
+        cycles = jnp.maximum(n_levels[:, None], width_bound) + 1
+    elif discipline == "levels":
+        # Lock-step: every real level pays max(1, per-type batch bound);
+        # the single-macro case serializes the three op types.
+        b = _ceil_div(ops[:, None, :, :], wt[:, :, None, :])   # (R, T, L, 3)
+        real = jnp.arange(ops.shape[1])[None, :] < n_levels[:, None]  # (R, L)
+        sum_b = b.sum(axis=-1)                           # (R, T, L)
+        max_b = b.max(axis=-1)
+        per_level = jnp.where(
+            is_single[None, :, None],
+            jnp.maximum(sum_b, 1),
+            jnp.maximum(max_b, 1),
+        )
+        per_level = per_level * real[:, None, :]
+        cycles = per_level.sum(axis=-1) + 1              # + pipeline drain
+        active = jnp.where(
+            is_single[None, :],
+            b.sum(axis=(-1, -2)),
+            (b * mpt[None, :, None, :]).sum(axis=(-1, -2)),
+        )
+    else:
+        raise ValueError(f"unknown discipline {discipline!r}")
+
+    fits = BITS_PER_GATE * gates[:, None] <= total_bits[None, :]
+    return cycles, active, fits
+
+
+def _make_schedule_grid():
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, discipline):
+        return _schedule_core(
+            ops, n_levels, width, mpt, is_single, total_bits, discipline
+        )
+
+    return jax.jit(fn, static_argnames=("discipline",))
+
+
+def _make_evaluate_grid():
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
+           model, discipline, mode):
+        cycles, active, fits = _schedule_core(
+            ops, n_levels, width, mpt, is_single, total_bits, discipline
+        )
+        # Explicit float64 casts so parity with the scalar path does not
+        # hinge on int/weak-float promotion rules.
+        t_ns = cycles.astype(jnp.float64) / model.f_clk_hz * 1e9
+        tot = ops.sum(axis=1)                            # (R, 3)
+        e_marg = jnp.asarray(model.e_op_marginal_fj, dtype=jnp.float64)
+        e_ops_fj = (tot * e_marg[None, :]).sum(axis=-1)  # (R,)
+        n_lvl = n_levels.astype(jnp.float64)[:, None]
+
+        if mode == "paper":
+            p_mw = paper_power_mw(n_lvl, model) * jnp.ones_like(t_ns)
+            e_nj = paper_energy_nj(p_mw, t_ns)
+        elif mode == "physical":
+            e_nj = physical_energy_nj(
+                t_ns, active, e_ops_fj[:, None], cols[None, :], model
+            )
+            p_mw = jnp.where(t_ns > 0, e_nj / t_ns * 1e3, 0.0)
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+
+        gates = tot.sum(axis=-1)
+        thr_gops = jnp.where(
+            t_ns > 0,
+            gates[:, None] / (t_ns * 1e-9) / 1e9 * model.pipeline_utilization,
+            0.0,
+        )
+        tops_w = jnp.where(p_mw > 0, (thr_gops / 1e3) / (p_mw * 1e-3), 0.0)
+        return dict(
+            cycles=cycles,
+            active_macro_cycles=active,
+            fits=fits,
+            latency_ns=t_ns,
+            energy_nj=e_nj,
+            power_mw=p_mw,
+            throughput_gops=thr_gops,
+            tops_per_watt=tops_w,
+        )
+
+    return jax.jit(fn, static_argnames=("model", "discipline", "mode"))
+
+
+_SCHEDULE_GRID = None
+_EVALUATE_GRID = None
+
+
+def _grids():
+    global _SCHEDULE_GRID, _EVALUATE_GRID
+    _load_jax()
+    if _SCHEDULE_GRID is None:
+        _SCHEDULE_GRID = _make_schedule_grid()
+        _EVALUATE_GRID = _make_evaluate_grid()
+    return _SCHEDULE_GRID, _EVALUATE_GRID
+
+
+# ---------------------------------------------------------------------------
+# Public batched API
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplorationGrid:
+    """The full recipe x topology sweep as ``(n_topologies, n_recipes)``
+    arrays — the batched analogue of ``ExplorationResult.evaluations``.
+
+    Flattened (``.ravel()``) order is topology-major, matching the scalar
+    loops ``for topo: for recipe:`` so argmin indices and tie-breaking
+    line up with the Python path.
+    """
+
+    recipes: tuple[tuple[str, ...], ...]
+    topologies: tuple[SramTopology, ...]
+    cycles: np.ndarray               # (T, R) int
+    active_macro_cycles: np.ndarray  # (T, R) int
+    fits: np.ndarray                 # (T, R) bool
+    latency_ns: np.ndarray           # (T, R)
+    energy_nj: np.ndarray            # (T, R)
+    power_mw: np.ndarray             # (T, R)
+    throughput_gops: np.ndarray      # (T, R)
+    tops_per_watt: np.ndarray        # (T, R)
+    area_mm2: np.ndarray             # (T,)
+    feasible: np.ndarray             # (T,) capacity-feasible (Alg. I line 9)
+    mode: str
+    discipline: str
+    model: EnergyModel
+
+    @property
+    def size(self) -> int:
+        return self.energy_nj.size
+
+    def unravel(self, flat_index: int) -> tuple[int, int]:
+        """Flat (topology-major) index -> (topology_idx, recipe_idx)."""
+        n_r = len(self.recipes)
+        return flat_index // n_r, flat_index % n_r
+
+    def fit_energies(self) -> np.ndarray:
+        return self.energy_nj[self.fits]
+
+    def best_index(self, max_latency_ns: float | None = None) -> int:
+        return select_best(
+            self.energy_nj,
+            self.fits,
+            latency=self.latency_ns,
+            max_latency=max_latency_ns,
+            feasible=np.broadcast_to(self.feasible[:, None], self.fits.shape),
+        )
+
+    def best_worst_indices(self) -> tuple[int, int]:
+        return select_best_worst(self.energy_nj, self.fits)
+
+
+def schedule_batch(
+    work: WorkloadTable,
+    topos: TopologyTable,
+    discipline: str = "list",
+) -> dict[str, np.ndarray]:
+    """``mapping.schedule_stats`` over the full grid in one jitted pass.
+
+    Returns ``(n_topologies, n_recipes)`` arrays: ``cycles``,
+    ``active_macro_cycles``, ``fits``.  (Pipelined writeback only — the
+    scalar path's default.)
+    """
+    schedule_grid, _ = _grids()
+    with enable_x64():
+        cycles, active, fits = schedule_grid(
+            work.ops, work.n_levels, topos.ops_per_cycle,
+            topos.macros_per_type, topos.is_single, topos.total_bits,
+            discipline,
+        )
+        return dict(
+            cycles=np.asarray(cycles).T,
+            active_macro_cycles=np.asarray(active).T,
+            fits=np.asarray(fits).T,
+        )
+
+
+def evaluate_batch(
+    work: WorkloadTable,
+    topos: TopologyTable,
+    model: EnergyModel | None = None,
+    mode: str = "physical",
+    discipline: str = "list",
+    feasible: np.ndarray | None = None,
+) -> ExplorationGrid:
+    """Schedule + evaluate the full recipe x topology grid in one jitted
+    float64 pass; the batched ``sram.evaluate``."""
+    _, evaluate_grid = _grids()
+    model = model or EnergyModel()
+    with enable_x64():
+        out = evaluate_grid(
+            work.ops, work.n_levels, topos.ops_per_cycle,
+            topos.macros_per_type, topos.is_single, topos.total_bits,
+            topos.cols, model, discipline, mode,
+        )
+        out = {k: np.asarray(v).T for k, v in out.items()}
+    if feasible is None:
+        feasible = np.ones(len(topos), dtype=bool)
+    return ExplorationGrid(
+        recipes=work.recipes,
+        topologies=topos.topologies,
+        area_mm2=topos.area_mm2(model),
+        feasible=np.asarray(feasible, dtype=bool),
+        mode=mode,
+        discipline=discipline,
+        model=model,
+        **out,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared admissibility filter + argmin (FilterEnergy)
+# ---------------------------------------------------------------------------
+
+
+def select_best(
+    energy,
+    fits,
+    latency=None,
+    max_latency: float | None = None,
+    feasible=None,
+) -> int:
+    """Alg. I line 14 — lowest-energy admissible implementation.
+
+    Admissibility tiers, in order (first non-empty pool wins, matching
+    both `explorer.explore` and `mesh_explorer.explore_mesh`):
+
+      1. fits capacity AND (feasible if given) AND (latency constraint
+         if given),
+      2. fits capacity,
+      3. everything.
+
+    Accepts arrays of any shape (flattened C-order); ties break to the
+    lowest flat index, like ``min`` over the scalar evaluation list.
+    """
+    energy = np.asarray(energy, dtype=float).ravel()
+    if energy.size == 0:
+        raise ValueError("select_best on an empty grid")
+    fits = np.asarray(fits, dtype=bool).ravel()
+    mask = fits.copy()
+    if feasible is not None:
+        mask &= np.asarray(feasible, dtype=bool).ravel()
+    if max_latency is not None and latency is not None:
+        mask &= np.asarray(latency, dtype=float).ravel() <= max_latency
+    for pool in (mask, fits, np.ones_like(fits)):
+        if pool.any():
+            return int(np.argmin(np.where(pool, energy, np.inf)))
+    raise AssertionError("unreachable")
+
+
+def select_best_worst(energy, fits) -> tuple[int, int]:
+    """Table I companion: (argmin, argmax) energy over the fitting pool
+    (or over everything when nothing fits)."""
+    energy = np.asarray(energy, dtype=float).ravel()
+    if energy.size == 0:
+        raise ValueError("select_best_worst on an empty grid")
+    pool = np.asarray(fits, dtype=bool).ravel()
+    if not pool.any():
+        pool = np.ones_like(pool)
+    best = int(np.argmin(np.where(pool, energy, np.inf)))
+    worst = int(np.argmax(np.where(pool, energy, -np.inf)))
+    return best, worst
+
+
+# ---------------------------------------------------------------------------
+# Batched Table II metrics (standalone per-topology figures)
+# ---------------------------------------------------------------------------
+
+
+def table2_batch(
+    topos: TopologyTable,
+    model: EnergyModel | None = None,
+    nor_fraction: float = 0.5,
+) -> dict[str, np.ndarray]:
+    """Vectorized ``sram.table2_metrics`` over a TopologyTable — the same
+    ``sram.table2_arrays`` expressions, one array pass, (T,) outputs."""
+    model = model or EnergyModel()
+    w = topos.ops_per_cycle.astype(float) * topos.n_macros
+    return table2_arrays(w, topos.area_mm2(model), model, nor_fraction)

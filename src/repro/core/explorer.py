@@ -17,16 +17,30 @@ role of YOSYS elaboration).  ``explore`` additionally returns every
 (recipe x topology) evaluation so the Fig 9 / Table I benchmarks can sweep
 all 64 x 12 = 768 implementations per circuit (6912 over the 9-circuit
 suite, matching the paper's 6900+ claim).
+
+Two backends drive the back half (ChaAIG -> Evaluate -> FilterEnergy):
+
+  * ``backend="python"`` — the original per-pair scalar loop over
+    `mapping.schedule_stats` + `sram.evaluate`; kept as the parity
+    reference.  The sweep lands in ``ExplorationResult.evaluations``.
+  * ``backend="jax"``    — the tensorized engine (`core/batch.py`): the
+    full recipe x topology grid is scheduled, evaluated, and filtered in
+    one jitted array pass.  The sweep lands in ``ExplorationResult.grid``
+    and ``best`` is re-materialized through the scalar model for an
+    exactly-comparable `Evaluation`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+from typing import Mapping, Sequence
+
+import numpy as np
 
 from .aig import Aig, AigStats
-from .mapping import MappingResult, schedule_stats
+from .batch import ExplorationGrid, TopologyTable, WorkloadTable, evaluate_batch
+from .mapping import BITS_PER_GATE, MappingResult, schedule_stats
 from .sram import (
     TOPOLOGY_LIBRARY,
     EnergyModel,
@@ -56,9 +70,32 @@ class ExplorationResult:
     inductor_nh: float
     opt_gate_recipe: tuple[str, ...]  # IdentifyOptOpeAIG
     opt_level_recipe: tuple[str, ...]  # IdentifyOptLogAIG
-    evaluations: list[Evaluation]    # every (recipe, topo) pair evaluated
+    evaluations: list[Evaluation]    # scalar sweep (backend="python")
     n_recipes: int
     wall_s: float
+    backend: str = "python"
+    grid: ExplorationGrid | None = None  # batched sweep (backend="jax")
+    cha: dict[tuple[str, ...], AigStats] | None = None
+
+    @property
+    def n_evaluations(self) -> int:
+        return self.grid.size if self.grid is not None else len(self.evaluations)
+
+    def sweep_energies(self, fits_only: bool = True) -> np.ndarray:
+        """Energy of every swept implementation, from whichever sweep
+        representation this result carries."""
+        if self.grid is not None:
+            return (
+                self.grid.fit_energies()
+                if fits_only
+                else self.grid.energy_nj.ravel()
+            )
+        pool = [
+            e.metrics.energy_nj
+            for e in self.evaluations
+            if e.schedule.fits or not fits_only
+        ]
+        return np.asarray(pool)
 
     def table_row(self) -> dict:
         m = self.best.metrics
@@ -79,6 +116,36 @@ class ExplorationResult:
         )
 
 
+def characterize_recipes(
+    rtl: Aig, recipes: Sequence[tuple[str, ...]] | None = None
+) -> dict[tuple[str, ...], AigStats]:
+    """Alg. I lines 3-6: create + characterize every recipe AIG, including
+    the un-transformed baseline recipe ``()`` first."""
+    recipes = list(recipes) if recipes is not None else enumerate_recipes()
+    runner = RecipeRunner(rtl)
+    cha: dict[tuple[str, ...], AigStats] = {}
+    for r in [()] + [tuple(x) for x in recipes]:
+        if r not in cha:
+            cha[r] = runner.run(r).characterize()
+    return cha
+
+
+def _materialize(
+    recipe: tuple[str, ...],
+    topo: SramTopology,
+    stats: AigStats,
+    model: EnergyModel,
+    mode: str,
+    discipline: str,
+) -> Evaluation:
+    """Scalar-path Evaluation for one grid cell (used to surface the argmin
+    of a batched sweep as a full dataclass, bit-identical to the python
+    backend's pick)."""
+    sched = schedule_stats(stats, topo, discipline=discipline)
+    met = evaluate(sched, topo, model, mode=mode)
+    return Evaluation(recipe, topo, stats, sched, met)
+
+
 def explore(
     rtl: Aig,
     sram_list: Sequence[SramTopology] = TOPOLOGY_LIBRARY,
@@ -87,22 +154,38 @@ def explore(
     mode: str = "physical",
     full_sweep: bool = True,
     max_latency_ns: float | None = None,
+    backend: str = "python",
+    discipline: str = "list",
+    cha: Mapping[tuple[str, ...], AigStats] | None = None,
 ) -> ExplorationResult:
     """Algorithm I.  ``full_sweep=True`` evaluates every recipe x topology
     (what Fig 9 reports); ``False`` restricts line 10-13 to the two optimal
-    AIGs exactly as the pseudocode does."""
+    AIGs exactly as the pseudocode does.
+
+    ``cha`` may supply precomputed characterizations (as returned by
+    `characterize_recipes`; must include the baseline recipe ``()``) so
+    repeated sweeps — e.g. backend benchmarking — skip the transform runs.
+    """
+    if backend not in ("python", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
     t0 = time.time()
     model = model or EnergyModel()
-    recipes = list(recipes) if recipes is not None else enumerate_recipes()
-    runner = RecipeRunner(rtl)
 
-    # Lines 3-6: create + characterize.  Include the un-transformed AIG as
-    # the implicit baseline recipe ().
-    all_recipes: list[tuple[str, ...]] = [()] + [tuple(r) for r in recipes]
-    cha: dict[tuple[str, ...], AigStats] = {}
-    for r in all_recipes:
-        aig = runner.run(r)
-        cha[r] = aig.characterize()
+    # Lines 3-6: create + characterize (or reuse the caller's cache).
+    if cha is None:
+        cha = characterize_recipes(rtl, recipes)
+    else:
+        cha = dict(cha)
+        if recipes is not None:
+            # honor the recipes restriction even with a larger cache
+            wanted = list(dict.fromkeys([()] + [tuple(r) for r in recipes]))
+            missing = [r for r in wanted if r not in cha]
+            if missing:
+                raise ValueError(f"cha is missing requested recipes {missing}")
+            cha = {r: cha[r] for r in wanted}
+    if () not in cha:
+        raise ValueError("cha must include the baseline recipe ()")
+    all_recipes = list(cha)
 
     # Lines 7-8: optimal-ops and optimal-levels AIGs.
     opt_gate = min(cha, key=lambda r: (cha[r].total_gates, cha[r].n_levels))
@@ -110,33 +193,55 @@ def explore(
 
     # Line 9: capacity-feasible topologies for the candidate AIGs.
     min_gates = min(cha[opt_gate].total_gates, cha[opt_level].total_gates)
-    feasible = [t for t in sram_list if t.total_bits >= 4 * min_gates]
+    feasible = [t for t in sram_list if t.total_bits >= BITS_PER_GATE * min_gates]
     if not feasible:
         feasible = [max(sram_list, key=lambda t: t.total_bits)]
 
     # Lines 10-13 (+ optional full sweep for Fig 9).
     sweep_recipes = all_recipes if full_sweep else [opt_gate, opt_level]
+    sweep_topos = list(sram_list) if full_sweep else list(feasible)
+
     evaluations: list[Evaluation] = []
-    for topo in sram_list if full_sweep else feasible:
-        for r in sweep_recipes:
-            sched = schedule_stats(cha[r], topo)
-            met = evaluate(sched, topo, model, mode=mode)
-            evaluations.append(Evaluation(r, topo, cha[r], sched, met))
+    grid: ExplorationGrid | None = None
+    if backend == "python":
+        for topo in sweep_topos:
+            for r in sweep_recipes:
+                sched = schedule_stats(cha[r], topo, discipline=discipline)
+                met = evaluate(sched, topo, model, mode=mode)
+                evaluations.append(Evaluation(r, topo, cha[r], sched, met))
 
-    # Line 14: lowest-energy among *feasible* implementations honoring the
-    # caller's latency constraint (the tool's stated contract: "tailored to
-    # the specified input memory and latency constraints").
-    def admissible(e: Evaluation) -> bool:
-        if not e.schedule.fits or e.topo not in feasible:
-            return False
-        if max_latency_ns is not None and e.metrics.latency_ns > max_latency_ns:
-            return False
-        return True
+        # Line 14: lowest-energy among *feasible* implementations honoring
+        # the caller's latency constraint (the tool's stated contract:
+        # "tailored to the specified input memory and latency constraints").
+        def admissible(e: Evaluation) -> bool:
+            if not e.schedule.fits or e.topo not in feasible:
+                return False
+            if max_latency_ns is not None and e.metrics.latency_ns > max_latency_ns:
+                return False
+            return True
 
-    pool = [e for e in evaluations if admissible(e)]
-    if not pool:
-        pool = [e for e in evaluations if e.schedule.fits] or evaluations
-    best = min(pool, key=lambda e: e.metrics.energy_nj)
+        pool = [e for e in evaluations if admissible(e)]
+        if not pool:
+            pool = [e for e in evaluations if e.schedule.fits] or evaluations
+        best = min(pool, key=lambda e: e.metrics.energy_nj)
+    else:
+        work = WorkloadTable.from_stats([(r, cha[r]) for r in sweep_recipes])
+        topo_table = TopologyTable.from_topologies(sweep_topos)
+        grid = evaluate_batch(
+            work,
+            topo_table,
+            model,
+            mode=mode,
+            discipline=discipline,
+            feasible=np.array([t in feasible for t in sweep_topos], dtype=bool),
+        )
+        # Line 14 on the grid; re-materialize the winner through the scalar
+        # model so `best` is exactly the object the python backend returns.
+        ti, ri = grid.unravel(grid.best_index(max_latency_ns))
+        best = _materialize(
+            sweep_recipes[ri], sweep_topos[ti], cha[sweep_recipes[ri]],
+            model, mode, discipline,
+        )
 
     # Line 15: inductor sizing for the chosen topology.
     l_nh = inductor_size_nh(best.topo, model)
@@ -150,11 +255,31 @@ def explore(
         evaluations=evaluations,
         n_recipes=len(all_recipes),
         wall_s=time.time() - t0,
+        backend=backend,
+        grid=grid,
+        cha=cha,
     )
 
 
 def best_worst(result: ExplorationResult) -> tuple[Evaluation, Evaluation]:
     """Table I companion: best- and worst-case feasible implementations."""
+    if result.grid is not None:
+        if result.cha is None:
+            raise ValueError(
+                "grid-backed ExplorationResult needs .cha to materialize "
+                "Evaluations (explore() always sets it)"
+            )
+        g = result.grid
+        i_best, i_worst = g.best_worst_indices()
+        out = []
+        for i in (i_best, i_worst):
+            ti, ri = g.unravel(i)
+            recipe, topo = g.recipes[ri], g.topologies[ti]
+            out.append(
+                _materialize(recipe, topo, result.cha[recipe],
+                             g.model, g.mode, g.discipline)
+            )
+        return out[0], out[1]
     pool = [e for e in result.evaluations if e.schedule.fits]
     pool = pool or result.evaluations
     best = min(pool, key=lambda e: e.metrics.energy_nj)

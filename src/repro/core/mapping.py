@@ -26,6 +26,20 @@ from typing import Sequence
 from .aig import AigStats
 from .sram import OP_TYPES, SramTopology
 
+# Alg. I line 9 capacity rule: 2 operand bits + 2 output bits per gate
+# ("accounting for cases where complementary outputs are required").
+BITS_PER_GATE = 4
+
+# Sense-amp groups per op type by macro count (§III-D): a single macro
+# time-multiplexes the three types, three macros dedicate one macro per
+# type, six macros dedicate two.  Shared with the batched engine
+# (core/batch.py), which stacks these rows into a per-topology array.
+MACROS_PER_TYPE: dict[int, tuple[int, int, int]] = {
+    1: (1, 1, 1),
+    3: (1, 1, 1),
+    6: (2, 2, 2),
+}
+
 
 @dataclasses.dataclass
 class MappingResult:
@@ -45,13 +59,9 @@ class MappingResult:
 
 
 def _macros_per_type(topo: SramTopology) -> dict[str, int]:
-    if topo.n_macros == 1:
-        return {t: 1 for t in OP_TYPES}  # time-multiplexed
-    if topo.n_macros == 3:
-        return {t: 1 for t in OP_TYPES}  # one dedicated macro per type
-    if topo.n_macros == 6:
-        return {t: 2 for t in OP_TYPES}  # two dedicated macros per type
-    raise ValueError(f"unsupported macro count {topo.n_macros}")
+    if topo.n_macros not in MACROS_PER_TYPE:
+        raise ValueError(f"unsupported macro count {topo.n_macros}")
+    return dict(zip(OP_TYPES, MACROS_PER_TYPE[topo.n_macros]))
 
 
 def schedule_stats(
@@ -116,7 +126,7 @@ def schedule_stats(
 
     # Capacity check (Alg. I line 9): 4 bits per gate.
     gates = sum(op_counts.values())
-    fits = 4 * gates <= topo.total_bits
+    fits = BITS_PER_GATE * gates <= topo.total_bits
     # Row schedule: each level batch needs 2 operand rows + 1 result row;
     # rows are recycled every other level (outputs become next operands).
     max_batches = max(per_level_cycles) if per_level_cycles else 0
@@ -164,7 +174,7 @@ def _schedule_list(stats: AigStats, topo: SramTopology) -> MappingResult:
     total = max(depth_bound, width_bound) + 1  # +1 writeback drain
 
     gates = sum(op_counts.values())
-    fits = 4 * gates <= topo.total_bits
+    fits = BITS_PER_GATE * gates <= topo.total_bits
     rows_used = min(topo.rows, 3 * math.ceil(max(1, width_bound) / max(1, depth_bound)) + 2)
 
     return MappingResult(

@@ -30,6 +30,10 @@ import argparse
 import dataclasses
 import json
 
+import numpy as np
+
+from .batch import select_best
+
 PJ_PER_FLOP = 0.6e-12
 PJ_PER_HBM_BYTE = 10e-12
 PJ_PER_LINK_BYTE = 25e-12
@@ -136,11 +140,16 @@ def explore_mesh(
                 )
             )
 
-    pool = [e for e in evals if e.fits]
-    if max_latency_s is not None:
-        pool = [e for e in pool if e.latency_s <= max_latency_s] or pool
-    pool = pool or evals
-    best = min(pool, key=lambda e: e.energy_j)
+    # FilterEnergy: the same admissibility-filter + argmin the SRAM
+    # explorer uses (core/batch.py), over the stacked evaluation arrays.
+    best = evals[
+        select_best(
+            np.array([e.energy_j for e in evals]),
+            np.array([e.fits for e in evals]),
+            latency=np.array([e.latency_s for e in evals]),
+            max_latency=max_latency_s,
+        )
+    ]
     return dict(
         arch=arch, shape=shape,
         best=dict(topo=best.topo, recipe=best.recipe,

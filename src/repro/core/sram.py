@@ -168,6 +168,33 @@ class Metrics:
         return dataclasses.asdict(self)
 
 
+# --- mode arithmetic, shared with the batched engine (core/batch.py) -------
+#
+# These helpers are written against plain arithmetic operators so they accept
+# python floats, numpy arrays, and jax arrays alike.  ``evaluate`` (scalar)
+# and ``evaluate_batch`` (grid) call the *same* expressions, so the two paths
+# agree to floating-point round-off by construction.
+
+
+def paper_power_mw(n_levels, model: EnergyModel):
+    """Paper-mode power: P = alpha x level count (reverse-engineered Table I)."""
+    return model.alpha_mw_per_level * n_levels
+
+
+def paper_energy_nj(power_mw, latency_ns):
+    return power_mw * latency_ns * 1e-3  # mW * ns = pJ; /1e3 -> nJ
+
+
+def physical_energy_nj(latency_ns, active_macro_cycles, e_ops_fj, cols,
+                       model: EnergyModel):
+    """Physical-mode decomposition: control + active-macro + per-op terms."""
+    e_ctrl_fj = model.p_ctrl_mw * 1e-3 * (latency_ns * 1e-9) * 1e15
+    e_macro_fj = active_macro_cycles * (
+        model.e_macro_cycle_fj + model.e_col_cycle_fj * cols
+    )
+    return (e_ctrl_fj + e_macro_fj + e_ops_fj) * 1e-6
+
+
 def evaluate(
     schedule: "MappingResult",
     topo: SramTopology,
@@ -188,15 +215,12 @@ def evaluate(
     e_ops_fj = sum(n_ops[t] * e for t, e in zip(OP_TYPES, model.e_op_marginal_fj))
 
     if mode == "paper":
-        p_mw = model.alpha_mw_per_level * schedule.n_levels
-        e_nj = p_mw * t_ns * 1e-3  # mW * ns = pJ; /1e3 -> nJ
+        p_mw = paper_power_mw(schedule.n_levels, model)
+        e_nj = paper_energy_nj(p_mw, t_ns)
     elif mode == "physical":
-        e_ctrl_fj = model.p_ctrl_mw * 1e-3 * (t_ns * 1e-9) * 1e15
-        macro_cycles = schedule.active_macro_cycles
-        e_macro_fj = macro_cycles * (
-            model.e_macro_cycle_fj + model.e_col_cycle_fj * topo.cols
+        e_nj = physical_energy_nj(
+            t_ns, schedule.active_macro_cycles, e_ops_fj, topo.cols, model
         )
-        e_nj = (e_ctrl_fj + e_macro_fj + e_ops_fj) * 1e-6
         p_mw = e_nj / t_ns * 1e3 if t_ns > 0 else 0.0
     else:
         raise ValueError(f"unknown mode {mode!r}")
@@ -221,6 +245,28 @@ def evaluate(
     )
 
 
+def table2_arrays(ops_per_cycle, area_mm2, model: EnergyModel,
+                  nor_fraction: float = 0.5) -> dict:
+    """Table II arithmetic over total sense-amp width + area.
+
+    Array-agnostic like the mode helpers above: ``table2_metrics`` feeds
+    it scalars, ``batch.table2_batch`` feeds it (T,) arrays — one set of
+    expressions, no drift between the scalar and batched paths.
+    """
+    # NOR discharge (350 ps) utilizes the 1 ns cycle worse than NAND (150 ps)
+    util = model.pipeline_utilization * (1.0 - 0.14 * nor_fraction)
+    gops = ops_per_cycle * model.f_clk_hz / 1e9 * util
+    e_mix_fj = (1 - nor_fraction) * model.e_op_fj[0] + nor_fraction * model.e_op_fj[1]
+    p_mw = gops * e_mix_fj * 1e-3 + model.p_ctrl_mw * 0.4
+    return dict(
+        throughput_gops=gops,
+        power_mw=p_mw,
+        tops_per_watt=(gops / 1e3) / (p_mw * 1e-3),
+        gops_per_mm2=gops / area_mm2,
+        area_mm2=area_mm2,
+    )
+
+
 def table2_metrics(
     topo: SramTopology,
     model: EnergyModel | None = None,
@@ -235,19 +281,7 @@ def table2_metrics(
     """
     model = model or EnergyModel()
     w = topo.ops_per_cycle_per_macro * topo.n_macros
-    # NOR discharge (350 ps) utilizes the 1 ns cycle worse than NAND (150 ps)
-    util = model.pipeline_utilization * (1.0 - 0.14 * nor_fraction)
-    gops = w * model.f_clk_hz / 1e9 * util
-    e_mix_fj = (1 - nor_fraction) * model.e_op_fj[0] + nor_fraction * model.e_op_fj[1]
-    p_mw = gops * e_mix_fj * 1e-3 + model.p_ctrl_mw * 0.4
-    area = topo.area_mm2(model)
-    return dict(
-        throughput_gops=gops,
-        power_mw=p_mw,
-        tops_per_watt=(gops / 1e3) / (p_mw * 1e-3),
-        gops_per_mm2=gops / area,
-        area_mm2=area,
-    )
+    return table2_arrays(w, topo.area_mm2(model), model, nor_fraction)
 
 
 def peak_throughput_gops(topo: SramTopology, model: EnergyModel | None = None) -> float:

@@ -70,6 +70,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # newer jax returns a single dict; older returned [dict] per program
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
 
     # Trip-count-corrected HLO costs (XLA's cost_analysis counts while

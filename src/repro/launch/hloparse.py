@@ -161,10 +161,19 @@ def _dot_flops(line: str, syms: dict) -> float:
     for d in res_dims:
         n_res *= d
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-    ops = re.search(r"dot\(%?([\w.\-]+),", line)
-    if not m or not ops or ops.group(1) not in syms:
+    # lhs operand: either "dot(%name, ..." or, in newer HLO text,
+    # "dot(f32[64,32]{1,0} %name, ..." with the shape inlined.
+    ops = re.search(
+        r"dot\((?:(\w+)\[([\d,]*)\](?:\{[^}]*\})?\s+)?%?([\w.\-]+)\s*[,)]", line
+    )
+    if not m or not ops:
         return 2.0 * n_res  # degenerate (K unknown)
-    _, lhs_dims = syms[ops.group(1)]
+    if ops.group(2) is not None:
+        lhs_dims = [int(d) for d in ops.group(2).split(",") if d]
+    elif ops.group(3) in syms:
+        _, lhs_dims = syms[ops.group(3)]
+    else:
+        return 2.0 * n_res  # degenerate (K unknown)
     k = 1
     for idx in (int(i) for i in m.group(1).split(",") if i):
         if idx < len(lhs_dims):

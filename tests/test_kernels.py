@@ -6,6 +6,8 @@ block widths) and validates in interpret mode per the assignment.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import circuits as C

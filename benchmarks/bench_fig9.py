@@ -12,10 +12,11 @@ decoupled so the sweep stays CPU-tractable):
      regime where Fig 9's claims live: 3-macro vs 1-macro energy (-39%),
      macro-doubling energy drop (-47%), 6-macro latency (-66% vs single).
 
-Both sections consume the batched exploration grid (core/batch.py): the
-recipe sweep runs ``explore(backend="jax")`` and reads the
-``ExplorationGrid``; the topology trends are one ``evaluate_batch`` call
-per circuit instead of 12 scalar schedule/evaluate pairs.
+Both sections ride the suite-level engine (core/batch.py): section A is
+one `explorer.explore_suite` call (suite characterization + a single
+circuits x recipes x topologies sweep); section B stacks the paper-scale
+baselines into a `SuiteTable` and runs ONE `evaluate_suite` call for all
+circuits x 12 topologies.
 """
 
 from __future__ import annotations
@@ -23,9 +24,8 @@ from __future__ import annotations
 import time
 
 from repro.core import circuits as C
-from repro.core.batch import TopologyTable, WorkloadTable, evaluate_batch
-from repro.core.explorer import explore
-from repro.core.mapping import schedule_stats
+from repro.core.batch import SuiteTable, TopologyTable, evaluate_suite
+from repro.core.explorer import explore_suite
 from repro.core.sram import (
     MACRO_SIZES_KB,
     TOPOLOGY_LIBRARY,
@@ -33,30 +33,30 @@ from repro.core.sram import (
     SramTopology,
     evaluate,
 )
+from repro.core.mapping import schedule_stats
 
 from .common import Csv
 
 
-def run(csv: Csv, scale: str = "tiny", recipes=None, backend: str = "jax") -> dict:
-    results = {}
-    # ---- section A: recipe sweep -----------------------------------------
+def run(csv: Csv, scale: str = "tiny", recipes=None, backend: str = "jax",
+        cache=None) -> dict:
+    # ---- section A: recipe sweep (one suite-level call) --------------------
     suite = C.benchmark_suite(scale=scale)
+    t0 = time.time()
+    results = explore_suite(suite, recipes=recipes, backend=backend,
+                            cache=cache)
     total = 0
-    for name, rtl in suite.items():
-        t0 = time.time()
-        res = explore(rtl, recipes=recipes, backend=backend)
-        dt = (time.time() - t0) * 1e6
-        results[name] = res
+    for name, res in results.items():
         total += res.n_evaluations
         es = res.sweep_energies(fits_only=True)
         spread = (float(es.max()) / float(es.min())) if es.size else 0.0
         csv.add(
-            f"fig9/recipes/{name}", dt,
+            f"fig9/recipes/{name}", res.wall_s * 1e6,
             f"impls={res.n_evaluations};best={res.best.topo.name}"
             f"({','.join(res.best.recipe) or '-'});"
             f"energy_spread={spread:.1f}x",
         )
-    csv.add("fig9/recipes/TOTAL", 0.0,
+    csv.add("fig9/recipes/TOTAL", (time.time() - t0) * 1e6,
             f"implementations={total}(paper 6912 at server scale)")
 
     # ---- section B: topology trends at paper scale -------------------------
@@ -65,29 +65,35 @@ def run(csv: Csv, scale: str = "tiny", recipes=None, backend: str = "jax") -> di
     topo_index = {
         (t.macro_kb, t.n_macros): i for i, t in enumerate(TOPOLOGY_LIBRARY)
     }
-    trends = dict(d3m=[], d48=[], lat6=[], best6=[])
-    for name, rtl in C.benchmark_suite(scale="paper").items():
-        st = rtl.characterize()
-        if backend == "jax":
-            # One jitted pass over all 12 topologies for this circuit.
-            grid = evaluate_batch(
-                WorkloadTable.from_stats([((), st)]), topo_table, em
-            )
+    paper_suite = C.benchmark_suite(scale="paper")
+    stats = {name: rtl.characterize() for name, rtl in paper_suite.items()}
 
-            def met(kb, m):
-                i = topo_index[(kb, m)]
-                return float(grid.energy_nj[i, 0]), float(grid.latency_ns[i, 0])
-        else:
-            def met(kb, m):
-                t = SramTopology(kb, m)
-                ref = evaluate(schedule_stats(st, t), t, em)
-                return ref.energy_nj, ref.latency_ns
+    if backend == "jax":
+        # ONE jitted pass: all circuits x 12 topologies (baseline recipe).
+        sg = evaluate_suite(
+            SuiteTable.from_cha({n: {(): s} for n, s in stats.items()}),
+            topo_table, em,
+        )
+
+        def met(name, kb, m):
+            g = sg.grid(name)
+            i = topo_index[(kb, m)]
+            return float(g.energy_nj[i, 0]), float(g.latency_ns[i, 0])
+    else:
+        def met(name, kb, m):
+            t = SramTopology(kb, m)
+            ref = evaluate(schedule_stats(stats[name], t), t, em)
+            return ref.energy_nj, ref.latency_ns
+
+    trends = dict(d3m=[], d48=[], lat6=[], best6=[])
+    for name in paper_suite:
+        st = stats[name]
 
         def e(kb, m):
-            return met(kb, m)[0]
+            return met(name, kb, m)[0]
 
         def lat(kb, m):
-            return met(kb, m)[1]
+            return met(name, kb, m)[1]
 
         d48 = 100 * (1 - e(8, 1) / e(4, 1))
         d3m = sum(

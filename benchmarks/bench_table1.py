@@ -1,26 +1,27 @@
 """Table I — best-case vs worst-case implementation per benchmark circuit:
-SRAM size, macro count, recipe, level count, gate counts, P/T/E."""
+SRAM size, macro count, recipe, level count, gate counts, P/T/E.
+
+Runs the whole suite through one `explorer.explore_suite` call (shared
+front half + a single circuits x recipes x topologies sweep); `best_worst`
+then runs the shared filter/argmin on each circuit's grid view."""
 
 from __future__ import annotations
 
-import time
-
 from repro.core import circuits as C
-from repro.core.explorer import best_worst, explore
+from repro.core.explorer import best_worst, explore_suite
 
 from .common import Csv
 
 
-def run(csv: Csv, scale: str = "tiny", recipes=None, backend: str = "jax") -> list[dict]:
+def run(csv: Csv, scale: str = "tiny", recipes=None, backend: str = "jax",
+        cache=None) -> list[dict]:
     suite = C.benchmark_suite(scale=scale)
+    results = explore_suite(suite, recipes=recipes, backend=backend,
+                            cache=cache)
     rows = []
     savings = []
-    for name, rtl in suite.items():
-        t0 = time.time()
-        # Batched grid sweep; best_worst runs the shared filter/argmin on it.
-        res = explore(rtl, recipes=recipes, backend=backend)
+    for name, res in results.items():
         b, w = best_worst(res)
-        dt = (time.time() - t0) * 1e6
         saving = 100 * (1 - b.metrics.energy_nj / w.metrics.energy_nj)
         savings.append(saving)
         for tag, ev in (("best", b), ("worst", w)):
@@ -34,7 +35,7 @@ def run(csv: Csv, scale: str = "tiny", recipes=None, backend: str = "jax") -> li
                      energy_nj=round(ev.metrics.energy_nj, 6))
             )
         csv.add(
-            f"table1/{name}", dt,
+            f"table1/{name}", res.wall_s * 1e6,
             f"best={b.topo.name}({','.join(b.recipe) or '-'})"
             f";worst={w.topo.name}({','.join(w.recipe) or '-'})"
             f";saving={saving:.1f}%",

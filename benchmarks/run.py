@@ -27,15 +27,19 @@ def main() -> None:
     from .common import Csv
 
     csv = Csv()
+    # One persistent characterization cache shared by every bench that
+    # runs the Algorithm-I front half (fig9's and table1's sweeps reuse
+    # each other's transforms; reruns of the harness start warm).
+    cache = "runs/cha_cache"
     print("name,us_per_call,derived")
     if "fig9" in which:
         from . import bench_fig9
 
-        bench_fig9.run(csv, scale=args.scale)
+        bench_fig9.run(csv, scale=args.scale, cache=cache)
     if "table1" in which:
         from . import bench_table1
 
-        bench_table1.run(csv, scale=args.scale)
+        bench_table1.run(csv, scale=args.scale, cache=cache)
     if "table2" in which:
         from . import bench_table2
 

@@ -3,13 +3,17 @@
     PYTHONPATH=src python examples/cim_explore.py --circuit adder --scale tiny
     PYTHONPATH=src python examples/cim_explore.py --all --scale default  # slower
 
+    # persistent characterization cache: first run is cold, reruns are
+    # near-instant (the sweep itself is one vmapped device call)
+    PYTHONPATH=src python examples/cim_explore.py --all --cache runs/cha_cache
+
 Prints the Table-I-style row for each circuit plus the best/worst spread.
 """
 
 import argparse
 
 from repro.core import circuits as C
-from repro.core.explorer import best_worst, explore
+from repro.core.explorer import best_worst, explore_suite
 
 
 def main():
@@ -21,13 +25,20 @@ def main():
     ap.add_argument("--max-latency-ns", type=float, default=None)
     ap.add_argument("--backend", choices=["python", "jax"], default="jax",
                     help="sweep backend: scalar reference or batched grid")
+    ap.add_argument("--cache", default=None, metavar="DIR",
+                    help="persistent characterization cache directory")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="characterization workers (default: min(4, cpus))")
     args = ap.parse_args()
 
     names = list(C._GENERATORS) if (args.all or args.circuit == "all") else [args.circuit]
     suite = C.benchmark_suite(scale=args.scale, only=names)
-    for name, rtl in suite.items():
-        res = explore(rtl, max_latency_ns=args.max_latency_ns,
-                      backend=args.backend)
+    results = explore_suite(
+        suite, max_latency_ns=args.max_latency_ns, backend=args.backend,
+        cache=args.cache, n_jobs=args.jobs,
+    )
+    for name, res in results.items():
+        rtl = suite[name]
         b, w = best_worst(res)
         row = res.table_row()
         print(f"\n=== {name} ({rtl.n_ands} AIG nodes, {res.n_recipes} recipes, "

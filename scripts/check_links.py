@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo markdown links in README.md and docs/.
+
+Checks every ``[text](target)`` whose target is not an external URL or a
+pure in-page anchor: the referenced file must exist relative to the
+linking file (anchors after ``#`` are stripped; they are not validated).
+
+    python scripts/check_links.py            # from the repo root
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(root: Path) -> list[str]:
+    errors = []
+    files = [root / "README.md"] + sorted((root / "docs").glob("**/*.md"))
+    for md in files:
+        if not md.exists():
+            continue
+        # strip fenced code blocks: their brackets are not links
+        text = re.sub(r"```.*?```", "", md.read_text(), flags=re.S)
+        for target in LINK_RE.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+                continue
+            if target.startswith("#"):
+                continue
+            path = (md.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors = check(root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} broken intra-repo link(s)", file=sys.stderr)
+        return 1
+    print("docs links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

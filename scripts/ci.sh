@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + explorer-backend benchmark in smoke mode.
+# CI entry point: tier-1 tests + docs link check + suite-level smoke bench.
 #
-#   scripts/ci.sh            # tests + smoke bench
-#   scripts/ci.sh --no-bench # tests only
+#   scripts/ci.sh            # tests + docs check + smoke bench
+#   scripts/ci.sh --no-bench # tests + docs check only
 #
 # Uses the PYTHONPATH=src layout (works without installation; `pip
 # install -e .` works too, see pyproject.toml).
@@ -14,17 +14,26 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== docs link check =="
+python scripts/check_links.py
+
 if [[ "${1:-}" != "--no-bench" ]]; then
-    echo "== explorer backend bench (smoke) =="
-    python -m benchmarks.bench_explorer --smoke
+    echo "== suite-level explorer bench (smoke, cache cold + warm) =="
+    mkdir -p runs
+    python -m benchmarks.bench_explorer --smoke --out runs/BENCH_explorer_smoke.json
     python - <<'EOF'
 import json
-with open("BENCH_explorer.json") as f:
+with open("runs/BENCH_explorer_smoke.json") as f:
     r = json.load(f)
 total = r["total"]
 assert total["all_agree"], "python/jax backends disagree on best implementation"
+cold, warm = total["characterize_cold_s"], total["characterize_warm_s"]
+assert warm < cold, f"warm cache not faster than cold ({warm}s vs {cold}s)"
+assert warm < 2.0, f"warm-cache characterization should be near-zero, got {warm}s"
 print(f"suite sweep speedup: {total['speedup']}x "
-      f"(python {total['python_us']:.0f}us -> jax {total['jax_us']:.0f}us)")
+      f"(python {total['python_us']:.0f}us -> jax {total['jax_us']:.0f}us); "
+      f"characterize cold {cold:.2f}s -> warm {warm:.3f}s; "
+      f"e2e cold {total['e2e']['cold_s']}s / warm {total['e2e']['warm_s']}s")
 EOF
 fi
 echo "CI OK"

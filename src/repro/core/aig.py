@@ -19,6 +19,8 @@ literal 0 = const0 and literal 1 = const1.  Primary inputs are nodes
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from functools import lru_cache
 from typing import Callable, Iterable, Sequence
 
 import numpy as np
@@ -67,7 +69,20 @@ class AigStats:
 
     @property
     def total_gates(self) -> int:
+        """Total mapped gate count (NAND2 + NOR2 + NOT)."""
         return self.nand_count + self.nor_count + self.inv_count
+
+    def to_dict(self) -> dict:
+        """JSON-safe form (used by the on-disk characterization cache)."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AigStats":
+        d = dict(d)
+        d["ops_per_level"] = [
+            {k: int(v) for k, v in lvl.items()} for lvl in d["ops_per_level"]
+        ]
+        return cls(**d)
 
     @property
     def max_ops_in_level(self) -> int:
@@ -300,46 +315,48 @@ class Aig:
                 out.append(n)
         return out
 
-    def truth_table(self, root_lit: int, support: Sequence[int]) -> int:
+    def truth_table(
+        self,
+        root_lit: int,
+        support: Sequence[int],
+        cone: Sequence[int] | None = None,
+    ) -> int:
         """Exact truth table of ``root_lit`` over ``support`` node ids.
 
-        Supports up to 16 inputs; returns an int with 2**k bits.
+        Supports up to 16 inputs; returns an int with 2**k bits (pattern p
+        is bit p, LSB-first, support[i] driving bit i of the pattern index).
         Assumes the cone of root_lit is fully covered by ``support``.
+        ``cone`` may supply a precomputed ``cone_nodes(root, set(support))``
+        topo order so callers that also need the cone walk it only once.
+
+        The whole simulation runs on arbitrary-precision python ints (one
+        int per node), which beats per-node numpy word arrays by a wide
+        margin for the k <= 16 cones the transforms use.
         """
         k = len(support)
         if k > 16:
             raise ValueError("truth_table limited to 16 inputs")
         n_pat = 1 << k
-        words = max(1, n_pat // 64)
-        # Build elementary truth tables for the support.
-        patt = np.zeros((self.n_pis, words), dtype=np.uint64)
-        sup_tt = _elementary_tables(k)
-        sup_set = {s: i for i, s in enumerate(support)}
-        # Simulate cone only: evaluate with support values as leaves.
-        vals: dict[int, np.ndarray] = {0: np.zeros(words, dtype=np.uint64)}
-        for s, i in sup_set.items():
-            vals[s] = sup_tt[i]
-        full = np.uint64(0xFFFFFFFFFFFFFFFF)
+        full = (1 << n_pat) - 1
+        vals: dict[int, int] = {0: 0}
+        for i, s in enumerate(support):
+            vals[s] = _elementary_int(i, k)
 
-        order = self.cone_nodes(lit_node(root_lit), set(support))
-        for n in order:
-            fa, fb = self._f0[n], self._f1[n]
-            va = vals[fa >> 1] ^ (full if (fa & 1) else np.uint64(0))
-            vb = vals[fb >> 1] ^ (full if (fb & 1) else np.uint64(0))
+        if cone is None:
+            cone = self.cone_nodes(lit_node(root_lit), set(support))
+        f0, f1 = self._f0, self._f1
+        for n in cone:
+            fa, fb = f0[n], f1[n]
+            va = vals[fa >> 1] ^ (full if (fa & 1) else 0)
+            vb = vals[fb >> 1] ^ (full if (fb & 1) else 0)
             vals[n] = va & vb
         root_node = lit_node(root_lit)
         if root_node not in vals:
             raise ValueError("support does not cover the cone")
         v = vals[root_node]
         if lit_phase(root_lit):
-            v = v ^ full
-        # Pack into an int, masking to n_pat bits.
-        acc = 0
-        for w in range(words - 1, -1, -1):
-            acc = (acc << 64) | int(v[w])
-        if n_pat < 64:
-            acc &= (1 << n_pat) - 1
-        return acc
+            v ^= full
+        return v
 
     # -- rebuilding ---------------------------------------------------------
 
@@ -383,6 +400,23 @@ class Aig:
     def clone(self) -> "Aig":
         return self.rebuild_mapped()
 
+    def fingerprint(self) -> str:
+        """Hex digest of the exact structure (PIs, fanin arrays, POs).
+
+        Two AIGs share a fingerprint iff they are node-for-node identical,
+        so — the transforms being deterministic functions of structure —
+        equal fingerprints imply equal transform results and equal
+        characterizations.  This is the key of the shared-prefix DAG
+        (transforms.RecipeRunner) and of the on-disk characterization
+        cache (transforms.CharacterizationCache).  ``name`` is excluded.
+        """
+        h = hashlib.sha256()
+        h.update(np.asarray([self.n_pis], dtype=np.int64).tobytes())
+        h.update(np.asarray(self._f0, dtype=np.int64).tobytes())
+        h.update(np.asarray(self._f1, dtype=np.int64).tobytes())
+        h.update(np.asarray(self.pos, dtype=np.int64).tobytes())
+        return h.hexdigest()
+
     # -- gate netlist (NAND2 / NOR2 / NOT) -----------------------------------
 
     def to_gate_netlist(self) -> "GateNetlist":
@@ -401,6 +435,20 @@ class Aig:
             nor_count=net.counts["nor"],
             inv_count=net.counts["inv"],
         )
+
+
+@lru_cache(maxsize=None)
+def _elementary_int(i: int, k: int) -> int:
+    """Truth table of variable i over k vars as a 2**k-bit int (bit p set
+    iff pattern p has var i = 1).  Built by block doubling: O(k) int ops."""
+    half = 1 << i
+    block = ((1 << half) - 1) << half  # 2**i zeros then 2**i ones
+    width = half * 2
+    n_pat = 1 << k
+    while width < n_pat:
+        block |= block << width
+        width *= 2
+    return block
 
 
 def _elementary_tables(k: int) -> np.ndarray:

@@ -41,7 +41,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from .aig import AigStats
-from .mapping import BITS_PER_GATE, MACROS_PER_TYPE
+from .mapping import BITS_PER_GATE, macros_per_type
 from .sram import (
     OP_TYPES,
     EnergyModel,
@@ -86,25 +86,29 @@ def _load_jax() -> None:
 
 @dataclasses.dataclass(frozen=True)
 class TopologyTable:
-    """The SRAM topology library as stacked arrays (one row per topology)."""
+    """The SRAM topology library as stacked arrays (one row per topology).
+
+    Units: ``total_bits`` in bits (capacity check is
+    ``mapping.BITS_PER_GATE`` = 4 bits/gate), ``ops_per_cycle`` in
+    gate-ops per macro per clock cycle (``cols/2`` sense-amp slots).
+    """
 
     topologies: tuple[SramTopology, ...]
-    rows: np.ndarray            # (T,)
-    cols: np.ndarray            # (T,)
+    rows: np.ndarray            # (T,) bitcell rows per macro
+    cols: np.ndarray            # (T,) bitcell columns per macro
     n_macros: np.ndarray        # (T,)
-    total_bits: np.ndarray      # (T,)
+    total_bits: np.ndarray      # (T,) capacity in bits, all macros
     ops_per_cycle: np.ndarray   # (T,) sense-amp slots per macro per cycle
     macros_per_type: np.ndarray  # (T, 3) dedicated macros per op type
     is_single: np.ndarray       # (T,) bool — time-multiplexed single macro
 
     @classmethod
     def from_topologies(cls, topos: Sequence[SramTopology]) -> "TopologyTable":
+        """Stack topologies (library entries and/or `sram.topology_grid`
+        design points) into one table; rejects unsupported macro counts."""
         topos = tuple(topos)
         if not topos:
             raise ValueError("empty topology list")
-        for t in topos:
-            if t.n_macros not in MACROS_PER_TYPE:
-                raise ValueError(f"unsupported macro count {t.n_macros}")
         return cls(
             topologies=topos,
             rows=np.array([t.rows for t in topos], dtype=np.int32),
@@ -115,7 +119,7 @@ class TopologyTable:
                 [t.ops_per_cycle_per_macro for t in topos], dtype=np.int32
             ),
             macros_per_type=np.array(
-                [MACROS_PER_TYPE[t.n_macros] for t in topos], dtype=np.int32
+                [macros_per_type(t.n_macros) for t in topos], dtype=np.int32
             ),
             is_single=np.array([t.n_macros == 1 for t in topos], dtype=bool),
         )
@@ -174,6 +178,109 @@ class WorkloadTable:
 
     def __len__(self) -> int:
         return len(self.recipes)
+
+
+@dataclasses.dataclass(frozen=True)
+class SuiteTable:
+    """A whole benchmark suite's `WorkloadTable`s stacked on a leading
+    circuit axis — the input of the circuits x recipes x topologies sweep.
+
+    All circuits share one recipe list (Algorithm I applies the same 64
+    recipes to every RTL input) and one padded level axis (the max over
+    the suite, rounded up to `LEVEL_PAD`); levels beyond ``n_levels[c, r]``
+    are zero padding which the schedule kernels mask out, so padded
+    results are bit-identical to each circuit's own `WorkloadTable` run.
+
+    ``ops[c, r, l, k]``: ops of type ``OP_TYPES[k]`` in level ``l`` of
+    recipe ``r`` of circuit ``c``.
+    """
+
+    circuits: tuple[str, ...]
+    recipes: tuple[tuple[str, ...], ...]
+    ops: np.ndarray        # (C, R, L_pad, 3)
+    n_levels: np.ndarray   # (C, R)
+    op_totals: np.ndarray  # (C, R, 3)
+    gates: np.ndarray      # (C, R)
+
+    @classmethod
+    def from_cha(
+        cls,
+        cha: Mapping[str, Mapping[tuple[str, ...], AigStats]],
+        pad_levels_to: int = LEVEL_PAD,
+    ) -> "SuiteTable":
+        """Stack per-circuit characterizations (as produced by
+        `transforms.characterize_suite` / `explorer.characterize_recipes`).
+        Every circuit must cover the same recipe set."""
+        if not cha:
+            raise ValueError("empty suite")
+        names = tuple(cha)
+        recipes = tuple(cha[names[0]])
+        for name in names:
+            if tuple(cha[name]) != recipes:
+                raise ValueError(
+                    f"circuit {name!r} covers a different recipe set"
+                )
+        max_l = max(
+            (s.n_levels for m in cha.values() for s in m.values()), default=1
+        )
+        pad = max(pad_levels_to, 1)
+        l_pad = ((max(max_l, 1) + pad - 1) // pad) * pad
+        tables = [
+            WorkloadTable.from_stats(cha[name], pad_levels_to=l_pad)
+            for name in names
+        ]
+        return cls.from_workloads(dict(zip(names, tables)))
+
+    @classmethod
+    def from_workloads(
+        cls, works: Mapping[str, WorkloadTable]
+    ) -> "SuiteTable":
+        """Stack prebuilt workload tables, re-padding to a common level
+        axis when they disagree."""
+        if not works:
+            raise ValueError("empty suite")
+        names = tuple(works)
+        recipes = works[names[0]].recipes
+        for name in names:
+            if works[name].recipes != recipes:
+                raise ValueError(
+                    f"circuit {name!r} covers a different recipe set"
+                )
+        l_pad = max(w.ops.shape[1] for w in works.values())
+        ops = np.zeros(
+            (len(names), len(recipes), l_pad, len(OP_TYPES)), dtype=np.int32
+        )
+        for i, name in enumerate(names):
+            w = works[name].ops
+            ops[i, :, : w.shape[1]] = w
+        op_totals = ops.sum(axis=2)
+        return cls(
+            circuits=names,
+            recipes=recipes,
+            ops=ops,
+            n_levels=np.stack([works[n].n_levels for n in names]),
+            op_totals=op_totals,
+            gates=op_totals.sum(axis=2),
+        )
+
+    def workload(self, circuit: str | int) -> WorkloadTable:
+        """One circuit's rows as a standalone `WorkloadTable` view."""
+        c = self.circuit_index(circuit)
+        return WorkloadTable(
+            recipes=self.recipes,
+            ops=self.ops[c],
+            n_levels=self.n_levels[c],
+            op_totals=self.op_totals[c],
+            gates=self.gates[c],
+        )
+
+    def circuit_index(self, circuit: str | int) -> int:
+        if isinstance(circuit, int):
+            return circuit
+        return self.circuits.index(circuit)
+
+    def __len__(self) -> int:
+        return len(self.circuits)
 
 
 # ---------------------------------------------------------------------------
@@ -241,7 +348,7 @@ def _make_schedule_grid():
     return jax.jit(fn, static_argnames=("discipline",))
 
 
-def _make_evaluate_grid():
+def _make_evaluate_grid_fn():
     def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
            model, discipline, mode):
         cycles, active, fits = _schedule_core(
@@ -284,11 +391,47 @@ def _make_evaluate_grid():
             tops_per_watt=tops_w,
         )
 
+    return fn
+
+
+def _make_evaluate_grid():
+    return jax.jit(
+        _make_evaluate_grid_fn(), static_argnames=("model", "discipline", "mode")
+    )
+
+
+def _make_schedule_suite():
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, discipline):
+        def per_circuit(o, nl):
+            return _schedule_core(
+                o, nl, width, mpt, is_single, total_bits, discipline
+            )
+
+        return jax.vmap(per_circuit)(ops, n_levels)
+
+    return jax.jit(fn, static_argnames=("discipline",))
+
+
+def _make_evaluate_suite():
+    evaluate_grid_fn = _make_evaluate_grid_fn()
+
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
+           model, discipline, mode):
+        def per_circuit(o, nl):
+            return evaluate_grid_fn(
+                o, nl, width, mpt, is_single, total_bits, cols,
+                model, discipline, mode,
+            )
+
+        return jax.vmap(per_circuit)(ops, n_levels)
+
     return jax.jit(fn, static_argnames=("model", "discipline", "mode"))
 
 
 _SCHEDULE_GRID = None
 _EVALUATE_GRID = None
+_SCHEDULE_SUITE = None
+_EVALUATE_SUITE = None
 
 
 def _grids():
@@ -298,6 +441,15 @@ def _grids():
         _SCHEDULE_GRID = _make_schedule_grid()
         _EVALUATE_GRID = _make_evaluate_grid()
     return _SCHEDULE_GRID, _EVALUATE_GRID
+
+
+def _suite_grids():
+    global _SCHEDULE_SUITE, _EVALUATE_SUITE
+    _load_jax()
+    if _SCHEDULE_SUITE is None:
+        _SCHEDULE_SUITE = _make_schedule_suite()
+        _EVALUATE_SUITE = _make_evaluate_suite()
+    return _SCHEDULE_SUITE, _EVALUATE_SUITE
 
 
 # ---------------------------------------------------------------------------
@@ -415,6 +567,141 @@ def evaluate_batch(
 
 
 # ---------------------------------------------------------------------------
+# Suite-level sweep: circuits x recipes x topologies in one jitted call
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SuiteGrid:
+    """The whole-suite sweep as ``(n_circuits, n_topologies, n_recipes)``
+    arrays — one `ExplorationGrid` per circuit, stacked.
+
+    Produced by `evaluate_suite`; ``grid(circuit)`` slices one circuit
+    back out as a standard `ExplorationGrid` (numpy views, no copies), so
+    everything downstream of the per-circuit sweep (``best_index``,
+    `select_best`, `explorer.best_worst`) works unchanged.
+    """
+
+    circuits: tuple[str, ...]
+    recipes: tuple[tuple[str, ...], ...]
+    topologies: tuple[SramTopology, ...]
+    cycles: np.ndarray               # (C, T, R) int
+    active_macro_cycles: np.ndarray  # (C, T, R) int
+    fits: np.ndarray                 # (C, T, R) bool
+    latency_ns: np.ndarray           # (C, T, R)
+    energy_nj: np.ndarray            # (C, T, R)
+    power_mw: np.ndarray             # (C, T, R)
+    throughput_gops: np.ndarray      # (C, T, R)
+    tops_per_watt: np.ndarray        # (C, T, R)
+    area_mm2: np.ndarray             # (T,)
+    feasible: np.ndarray             # (C, T) capacity-feasible per circuit
+    mode: str
+    discipline: str
+    model: EnergyModel
+
+    @property
+    def size(self) -> int:
+        """Total swept implementations (circuits x topologies x recipes)."""
+        return self.energy_nj.size
+
+    def circuit_index(self, circuit: str | int) -> int:
+        if isinstance(circuit, int):
+            return circuit
+        return self.circuits.index(circuit)
+
+    def grid(self, circuit: str | int) -> ExplorationGrid:
+        """One circuit's ``(T, R)`` slice as an `ExplorationGrid`."""
+        c = self.circuit_index(circuit)
+        return ExplorationGrid(
+            recipes=self.recipes,
+            topologies=self.topologies,
+            cycles=self.cycles[c],
+            active_macro_cycles=self.active_macro_cycles[c],
+            fits=self.fits[c],
+            latency_ns=self.latency_ns[c],
+            energy_nj=self.energy_nj[c],
+            power_mw=self.power_mw[c],
+            throughput_gops=self.throughput_gops[c],
+            tops_per_watt=self.tops_per_watt[c],
+            area_mm2=self.area_mm2,
+            feasible=self.feasible[c],
+            mode=self.mode,
+            discipline=self.discipline,
+            model=self.model,
+        )
+
+    def grids(self) -> dict[str, ExplorationGrid]:
+        return {name: self.grid(name) for name in self.circuits}
+
+
+def schedule_suite(
+    suite: SuiteTable,
+    topos: TopologyTable,
+    discipline: str = "list",
+) -> dict[str, np.ndarray]:
+    """`schedule_batch` vmapped over the circuit axis: one jitted pass
+    computing ``(n_circuits, n_topologies, n_recipes)`` ``cycles`` /
+    ``active_macro_cycles`` / ``fits`` arrays for the whole suite."""
+    schedule, _ = _suite_grids()
+    with enable_x64():
+        cycles, active, fits = schedule(
+            suite.ops, suite.n_levels, topos.ops_per_cycle,
+            topos.macros_per_type, topos.is_single, topos.total_bits,
+            discipline,
+        )
+        return dict(
+            cycles=np.swapaxes(np.asarray(cycles), 1, 2),
+            active_macro_cycles=np.swapaxes(np.asarray(active), 1, 2),
+            fits=np.swapaxes(np.asarray(fits), 1, 2),
+        )
+
+
+def evaluate_suite(
+    suite: SuiteTable,
+    topos: TopologyTable,
+    model: EnergyModel | None = None,
+    mode: str = "physical",
+    discipline: str = "list",
+    feasible: np.ndarray | None = None,
+) -> SuiteGrid:
+    """Schedule + evaluate circuits x recipes x topologies in one jitted
+    float64 pass — the suite-level `evaluate_batch`.
+
+    ``feasible``: optional ``(n_circuits, n_topologies)`` bool mask of
+    capacity-feasible topologies per circuit (Alg. I line 9); defaults to
+    all-feasible, as in `evaluate_batch`.
+    """
+    _, evaluate = _suite_grids()
+    model = model or EnergyModel()
+    with enable_x64():
+        out = evaluate(
+            suite.ops, suite.n_levels, topos.ops_per_cycle,
+            topos.macros_per_type, topos.is_single, topos.total_bits,
+            topos.cols, model, discipline, mode,
+        )
+        out = {k: np.swapaxes(np.asarray(v), 1, 2) for k, v in out.items()}
+    if feasible is None:
+        feasible = np.ones((len(suite), len(topos)), dtype=bool)
+    feasible = np.asarray(feasible, dtype=bool)
+    if feasible.shape != (len(suite), len(topos)):
+        raise ValueError(
+            f"feasible must be (n_circuits, n_topologies)="
+            f"{(len(suite), len(topos))}, got {feasible.shape}"
+        )
+    return SuiteGrid(
+        circuits=suite.circuits,
+        recipes=suite.recipes,
+        topologies=topos.topologies,
+        area_mm2=topos.area_mm2(model),
+        feasible=feasible,
+        mode=mode,
+        discipline=discipline,
+        model=model,
+        **out,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Shared admissibility filter + argmin (FilterEnergy)
 # ---------------------------------------------------------------------------
 
@@ -428,6 +715,15 @@ def select_best(
 ) -> int:
     """Alg. I line 14 — lowest-energy admissible implementation.
 
+    Args:
+        energy: energies, any shape (nJ for the SRAM explorer, J for the
+            mesh explorer — only the ordering matters).
+        fits: bool mask, same shape — capacity check (4 bits/gate).
+        latency: optional latencies (same unit as ``max_latency``; ns for
+            the SRAM explorer, s for the mesh explorer).
+        max_latency: optional admissibility bound on ``latency``.
+        feasible: optional bool mask — Alg. I line 9 topology feasibility.
+
     Admissibility tiers, in order (first non-empty pool wins, matching
     both `explorer.explore` and `mesh_explorer.explore_mesh`):
 
@@ -436,7 +732,7 @@ def select_best(
       2. fits capacity,
       3. everything.
 
-    Accepts arrays of any shape (flattened C-order); ties break to the
+    Returns the flat C-order index of the winner; ties break to the
     lowest flat index, like ``min`` over the scalar evaluation list.
     """
     energy = np.asarray(energy, dtype=float).ravel()

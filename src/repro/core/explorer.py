@@ -28,18 +28,32 @@ Two backends drive the back half (ChaAIG -> Evaluate -> FilterEnergy):
     one jitted array pass.  The sweep lands in ``ExplorationResult.grid``
     and ``best`` is re-materialized through the scalar model for an
     exactly-comparable `Evaluation`.
+
+Suite-level entry point: `explore_suite` runs Algorithm I over a whole
+benchmark suite at once — the front half through
+`transforms.characterize_suite` (shared-prefix DAG, on-disk cache,
+process pool) and the back half through one `batch.evaluate_suite` call
+vmapped over circuits x recipes x topologies.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Mapping, Sequence
 
 import numpy as np
 
 from .aig import Aig, AigStats
-from .batch import ExplorationGrid, TopologyTable, WorkloadTable, evaluate_batch
+from .batch import (
+    ExplorationGrid,
+    SuiteTable,
+    TopologyTable,
+    WorkloadTable,
+    evaluate_batch,
+    evaluate_suite,
+)
 from .mapping import BITS_PER_GATE, MappingResult, schedule_stats
 from .sram import (
     TOPOLOGY_LIBRARY,
@@ -49,7 +63,11 @@ from .sram import (
     evaluate,
     inductor_size_nh,
 )
-from .transforms import RecipeRunner, enumerate_recipes
+from .transforms import (
+    CharacterizationCache,
+    enumerate_recipes,
+    characterize_suite,
+)
 
 
 @dataclasses.dataclass
@@ -117,17 +135,23 @@ class ExplorationResult:
 
 
 def characterize_recipes(
-    rtl: Aig, recipes: Sequence[tuple[str, ...]] | None = None
+    rtl: Aig,
+    recipes: Sequence[tuple[str, ...]] | None = None,
+    cache: "CharacterizationCache | str | os.PathLike | None" = None,
+    n_jobs: int | None = 1,
 ) -> dict[tuple[str, ...], AigStats]:
     """Alg. I lines 3-6: create + characterize every recipe AIG, including
-    the un-transformed baseline recipe ``()`` first."""
-    recipes = list(recipes) if recipes is not None else enumerate_recipes()
-    runner = RecipeRunner(rtl)
-    cha: dict[tuple[str, ...], AigStats] = {}
-    for r in [()] + [tuple(x) for x in recipes]:
-        if r not in cha:
-            cha[r] = runner.run(r).characterize()
-    return cha
+    the un-transformed baseline recipe ``()`` first.
+
+    Thin single-circuit wrapper over `transforms.characterize_suite`:
+    ``cache`` (a `CharacterizationCache` or a directory path) makes the
+    result persistent across runs, ``n_jobs`` > 1 characterizes
+    independent prefix branches on a process pool (default serial — one
+    circuit rarely amortizes worker startup).
+    """
+    return characterize_suite(
+        {rtl.name: rtl}, recipes, cache=cache, n_jobs=n_jobs
+    )[rtl.name]
 
 
 def _materialize(
@@ -146,6 +170,40 @@ def _materialize(
     return Evaluation(recipe, topo, stats, sched, met)
 
 
+def _restrict_cha(
+    cha: Mapping[tuple[str, ...], AigStats],
+    recipes: Sequence[tuple[str, ...]] | None,
+) -> dict[tuple[str, ...], AigStats]:
+    """Validate a characterization map and honor a recipes restriction."""
+    cha = dict(cha)
+    if recipes is not None:
+        wanted = list(dict.fromkeys([()] + [tuple(r) for r in recipes]))
+        missing = [r for r in wanted if r not in cha]
+        if missing:
+            raise ValueError(f"cha is missing requested recipes {missing}")
+        cha = {r: cha[r] for r in wanted}
+    if () not in cha:
+        raise ValueError("cha must include the baseline recipe ()")
+    return cha
+
+
+def _opt_and_feasible(
+    cha: Mapping[tuple[str, ...], AigStats],
+    sram_list: Sequence[SramTopology],
+) -> tuple[tuple[str, ...], tuple[str, ...], list[SramTopology]]:
+    """Alg. I lines 7-9: optimal-ops / optimal-levels recipes and the
+    capacity-feasible topology subset for those candidates."""
+    opt_gate = min(cha, key=lambda r: (cha[r].total_gates, cha[r].n_levels))
+    opt_level = min(cha, key=lambda r: (cha[r].n_levels, cha[r].total_gates))
+    min_gates = min(cha[opt_gate].total_gates, cha[opt_level].total_gates)
+    feasible = [
+        t for t in sram_list if t.total_bits >= BITS_PER_GATE * min_gates
+    ]
+    if not feasible:
+        feasible = [max(sram_list, key=lambda t: t.total_bits)]
+    return opt_gate, opt_level, feasible
+
+
 def explore(
     rtl: Aig,
     sram_list: Sequence[SramTopology] = TOPOLOGY_LIBRARY,
@@ -157,14 +215,39 @@ def explore(
     backend: str = "python",
     discipline: str = "list",
     cha: Mapping[tuple[str, ...], AigStats] | None = None,
+    cache: "CharacterizationCache | str | os.PathLike | None" = None,
+    n_jobs: int | None = 1,
 ) -> ExplorationResult:
-    """Algorithm I.  ``full_sweep=True`` evaluates every recipe x topology
-    (what Fig 9 reports); ``False`` restricts line 10-13 to the two optimal
-    AIGs exactly as the pseudocode does.
+    """Algorithm I for one circuit.
 
-    ``cha`` may supply precomputed characterizations (as returned by
-    `characterize_recipes`; must include the baseline recipe ``()``) so
-    repeated sweeps — e.g. backend benchmarking — skip the transform runs.
+    Args:
+        rtl: the input AIG (circuits.py generators play YOSYS elaboration).
+        sram_list: candidate topologies — the paper's 12-entry
+            `TOPOLOGY_LIBRARY` or a programmatic `sram.topology_grid`.
+        recipes: synthesis recipes to sweep (default: all 64 ordered
+            permutations; the baseline ``()`` is always included).
+        model: `EnergyModel` constants (default: paper-calibrated).
+        mode: energy accounting — ``"physical"`` decomposition or the
+            paper's Table-I ``"paper"`` arithmetic.
+        full_sweep: ``True`` evaluates every recipe x topology (what Fig 9
+            reports); ``False`` restricts lines 10-13 to the two optimal
+            AIGs exactly as the pseudocode does.
+        max_latency_ns: optional latency admissibility bound (ns).
+        backend: ``"python"`` scalar reference loop or ``"jax"`` batched
+            grid (`core/batch.py`).
+        discipline: cycle schedule — ``"list"`` (ASAP, default) or the
+            paper's lock-step ``"levels"``.
+        cha: precomputed characterizations (`characterize_recipes` output,
+            must include ``()``) so repeated sweeps skip the transforms.
+        cache: persistent characterization cache (path or
+            `CharacterizationCache`) consulted when ``cha`` is None.
+        n_jobs: process-pool width for characterization (1 = serial).
+
+    Returns:
+        `ExplorationResult`: the min-energy admissible implementation
+        (``best``, energies in nJ, latencies in ns, cycle counts exact
+        ints), the chosen inductor size (nH), and the full sweep
+        (``evaluations`` list or batched ``grid``).
     """
     if backend not in ("python", "jax"):
         raise ValueError(f"unknown backend {backend!r}")
@@ -173,29 +256,12 @@ def explore(
 
     # Lines 3-6: create + characterize (or reuse the caller's cache).
     if cha is None:
-        cha = characterize_recipes(rtl, recipes)
-    else:
-        cha = dict(cha)
-        if recipes is not None:
-            # honor the recipes restriction even with a larger cache
-            wanted = list(dict.fromkeys([()] + [tuple(r) for r in recipes]))
-            missing = [r for r in wanted if r not in cha]
-            if missing:
-                raise ValueError(f"cha is missing requested recipes {missing}")
-            cha = {r: cha[r] for r in wanted}
-    if () not in cha:
-        raise ValueError("cha must include the baseline recipe ()")
+        cha = characterize_recipes(rtl, recipes, cache=cache, n_jobs=n_jobs)
+    cha = _restrict_cha(cha, recipes)
     all_recipes = list(cha)
 
-    # Lines 7-8: optimal-ops and optimal-levels AIGs.
-    opt_gate = min(cha, key=lambda r: (cha[r].total_gates, cha[r].n_levels))
-    opt_level = min(cha, key=lambda r: (cha[r].n_levels, cha[r].total_gates))
-
-    # Line 9: capacity-feasible topologies for the candidate AIGs.
-    min_gates = min(cha[opt_gate].total_gates, cha[opt_level].total_gates)
-    feasible = [t for t in sram_list if t.total_bits >= BITS_PER_GATE * min_gates]
-    if not feasible:
-        feasible = [max(sram_list, key=lambda t: t.total_bits)]
+    # Lines 7-9: optimal AIGs + capacity-feasible topologies.
+    opt_gate, opt_level, feasible = _opt_and_feasible(cha, sram_list)
 
     # Lines 10-13 (+ optional full sweep for Fig 9).
     sweep_recipes = all_recipes if full_sweep else [opt_gate, opt_level]
@@ -259,6 +325,99 @@ def explore(
         grid=grid,
         cha=cha,
     )
+
+
+def explore_suite(
+    circuits: Mapping[str, Aig],
+    sram_list: Sequence[SramTopology] = TOPOLOGY_LIBRARY,
+    recipes: Sequence[tuple[str, ...]] | None = None,
+    model: EnergyModel | None = None,
+    mode: str = "physical",
+    max_latency_ns: float | None = None,
+    backend: str = "jax",
+    discipline: str = "list",
+    cha: Mapping[str, Mapping[tuple[str, ...], AigStats]] | None = None,
+    cache: "CharacterizationCache | str | os.PathLike | None" = None,
+    n_jobs: int | None = None,
+) -> dict[str, ExplorationResult]:
+    """Algorithm I over a whole benchmark suite in two device-sized steps.
+
+    Front half: one `transforms.characterize_suite` call — the 64-recipe
+    prefix DAG per circuit with structural dedup, optional persistent
+    ``cache``, and a process pool over independent branches and circuits
+    (``n_jobs``, default ``min(4, cpu_count)``).
+
+    Back half (``backend="jax"``): the characterizations are stacked into
+    a `batch.SuiteTable` and ONE `batch.evaluate_suite` call sweeps
+    circuits x recipes x topologies; each circuit's `ExplorationGrid` is
+    then a view into the stacked result.  ``backend="python"`` falls back
+    to the scalar per-circuit loop (still sharing the suite front half).
+
+    Returns ``{circuit: ExplorationResult}`` in the input's order; each
+    result's ``wall_s`` is the suite wall time divided evenly across
+    circuits (the work is genuinely shared).
+    """
+    if backend not in ("python", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    t0 = time.time()
+    model = model or EnergyModel()
+
+    if cha is None:
+        cha = characterize_suite(circuits, recipes, cache=cache, n_jobs=n_jobs)
+    cha = {name: _restrict_cha(cha[name], recipes) for name in circuits}
+
+    if backend == "python":
+        out = {
+            name: explore(
+                rtl, sram_list, recipes, model, mode,
+                max_latency_ns=max_latency_ns, backend="python",
+                discipline=discipline, cha=cha[name],
+            )
+            for name, rtl in circuits.items()
+        }
+        wall = (time.time() - t0) / max(1, len(out))
+        for res in out.values():
+            res.wall_s = wall
+        return out
+
+    names = list(circuits)
+    opt, feas_mask = {}, np.zeros((len(names), len(sram_list)), dtype=bool)
+    sram_list = list(sram_list)
+    for i, name in enumerate(names):
+        opt_gate, opt_level, feasible = _opt_and_feasible(cha[name], sram_list)
+        opt[name] = (opt_gate, opt_level)
+        feas_mask[i] = [t in feasible for t in sram_list]
+
+    suite = SuiteTable.from_cha(cha)
+    topo_table = TopologyTable.from_topologies(sram_list)
+    sg = evaluate_suite(
+        suite, topo_table, model, mode=mode, discipline=discipline,
+        feasible=feas_mask,
+    )
+
+    out = {}
+    wall = (time.time() - t0) / max(1, len(names))
+    for name in names:
+        grid = sg.grid(name)
+        ti, ri = grid.unravel(grid.best_index(max_latency_ns))
+        recipe, topo = grid.recipes[ri], sram_list[ti]
+        best = _materialize(
+            recipe, topo, cha[name][recipe], model, mode, discipline
+        )
+        out[name] = ExplorationResult(
+            circuit=circuits[name].name,
+            best=best,
+            inductor_nh=inductor_size_nh(topo, model),
+            opt_gate_recipe=opt[name][0],
+            opt_level_recipe=opt[name][1],
+            evaluations=[],
+            n_recipes=len(cha[name]),
+            wall_s=wall,
+            backend=backend,
+            grid=grid,
+            cha=cha[name],
+        )
+    return out
 
 
 def best_worst(result: ExplorationResult) -> tuple[Evaluation, Evaluation]:

@@ -41,6 +41,26 @@ MACROS_PER_TYPE: dict[int, tuple[int, int, int]] = {
 }
 
 
+def macros_per_type(n_macros: int) -> tuple[int, int, int]:
+    """Dedicated macros per op type (nand, nor, inv) for a macro count.
+
+    Generalizes the paper's three points (1: time-multiplexed single
+    macro, 3: one macro per type, 6: two per type) to any multiple of
+    three — the rule `topology_grid` design points follow.  Counts that
+    are neither 1 nor a multiple of 3 have no mapping under §III-D's
+    type-per-macro-group discipline and are rejected.
+    """
+    got = MACROS_PER_TYPE.get(n_macros)
+    if got is not None:
+        return got
+    if n_macros > 0 and n_macros % 3 == 0:
+        k = n_macros // 3
+        return (k, k, k)
+    raise ValueError(
+        f"unsupported macro count {n_macros}: must be 1 or a multiple of 3"
+    )
+
+
 @dataclasses.dataclass
 class MappingResult:
     topo: SramTopology
@@ -59,9 +79,7 @@ class MappingResult:
 
 
 def _macros_per_type(topo: SramTopology) -> dict[str, int]:
-    if topo.n_macros not in MACROS_PER_TYPE:
-        raise ValueError(f"unsupported macro count {topo.n_macros}")
-    return dict(zip(OP_TYPES, MACROS_PER_TYPE[topo.n_macros]))
+    return dict(zip(OP_TYPES, macros_per_type(topo.n_macros)))
 
 
 def schedule_stats(

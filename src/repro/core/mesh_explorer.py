@@ -106,16 +106,14 @@ def energy_proxy(rec: dict) -> float:
     )
 
 
-def explore_mesh(
+def _sweep_workload(
     arch: str,
     shape: str,
-    topologies=DEFAULT_TOPOLOGIES,
-    recipes=DEFAULT_RECIPES,
-    out_dir: str = "runs/mesh_explorer",
-    max_latency_s: float | None = None,
-) -> dict:
-    """Algorithm I over the mesh/recipe space.  Returns the full sweep plus
-    the min-energy admissible pick."""
+    topologies,
+    recipes,
+    out_dir: str,
+) -> list[MeshEvaluation]:
+    """Evaluate the full topology x recipe grid for one (arch, shape)."""
     from repro.launch.dryrun import run_cell
 
     evals: list[MeshEvaluation] = []
@@ -139,10 +137,15 @@ def explore_mesh(
                     record=record,
                 )
             )
+    return evals
 
+
+def _pick_best(
+    evals: list[MeshEvaluation], max_latency_s: float | None
+) -> MeshEvaluation:
     # FilterEnergy: the same admissibility-filter + argmin the SRAM
     # explorer uses (core/batch.py), over the stacked evaluation arrays.
-    best = evals[
+    return evals[
         select_best(
             np.array([e.energy_j for e in evals]),
             np.array([e.fits for e in evals]),
@@ -150,6 +153,20 @@ def explore_mesh(
             max_latency=max_latency_s,
         )
     ]
+
+
+def explore_mesh(
+    arch: str,
+    shape: str,
+    topologies=DEFAULT_TOPOLOGIES,
+    recipes=DEFAULT_RECIPES,
+    out_dir: str = "runs/mesh_explorer",
+    max_latency_s: float | None = None,
+) -> dict:
+    """Algorithm I over the mesh/recipe space.  Returns the full sweep plus
+    the min-energy admissible pick."""
+    evals = _sweep_workload(arch, shape, topologies, recipes, out_dir)
+    best = _pick_best(evals, max_latency_s)
     return dict(
         arch=arch, shape=shape,
         best=dict(topo=best.topo, recipe=best.recipe,
@@ -159,12 +176,68 @@ def explore_mesh(
     )
 
 
+def explore_mesh_suite(
+    workloads: "list[tuple[str, str]]",
+    topologies=DEFAULT_TOPOLOGIES,
+    recipes=DEFAULT_RECIPES,
+    out_dir: str = "runs/mesh_explorer",
+    max_latency_s: float | None = None,
+) -> dict:
+    """The suite path for the TPU instantiation: sweep several
+    (arch, shape) workloads over one topology x recipe grid — the
+    mesh analogue of `explorer.explore_suite`'s circuits axis.
+
+    Compile records are shared through `run_cell`'s on-disk run directory
+    (the dry-run layer's own persistent cache), so overlapping workloads
+    across calls do not recompile.  Returns ``{"workloads": {"arch/shape":
+    {best, sweep}}, "best": ...}`` with the global min-energy admissible
+    pick across the whole suite.
+    """
+    out: dict = {"workloads": {}}
+    tagged: list[tuple[str, MeshEvaluation]] = []
+    for arch, shape in workloads:
+        evals = _sweep_workload(arch, shape, topologies, recipes, out_dir)
+        key = f"{arch}/{shape}"
+        out["workloads"][key] = dict(
+            best=dataclasses.asdict(_pick_best(evals, max_latency_s))
+            | {"record": None},
+            sweep=[dataclasses.asdict(e) | {"record": None} for e in evals],
+        )
+        tagged.extend((key, e) for e in evals)
+    best_key, best = tagged[
+        select_best(
+            np.array([e.energy_j for _, e in tagged]),
+            np.array([e.fits for _, e in tagged]),
+            latency=np.array([e.latency_s for _, e in tagged]),
+            max_latency=max_latency_s,
+        )
+    ]
+    out["best"] = dataclasses.asdict(best) | {
+        "record": None, "workload": best_key
+    }
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--arch", required=True,
+                    help="architecture, or comma list for a suite sweep")
+    ap.add_argument("--shape", default="train_4k",
+                    help="shape, or comma list; a suite sweep covers the "
+                         "full arch x shape product")
     ap.add_argument("--max-latency-s", type=float, default=None)
     args = ap.parse_args()
+    archs = args.arch.split(",")
+    shapes = args.shape.split(",")
+    if len(archs) > 1 or len(shapes) > 1:
+        workloads = [(a, s) for a in archs for s in shapes]
+        res = explore_mesh_suite(workloads, max_latency_s=args.max_latency_s)
+        print(json.dumps(res["best"], indent=1))
+        for key, wl in res["workloads"].items():
+            b = wl["best"]
+            print(f"  {key:28s} -> {b['topo']:16s} {b['recipe']:12s} "
+                  f"lat={b['latency_s']:.4f}s E={b['energy_j']:.1f}J")
+        return
     res = explore_mesh(args.arch, args.shape, max_latency_s=args.max_latency_s)
     print(json.dumps(res["best"], indent=1))
     for e in res["sweep"]:

@@ -70,15 +70,46 @@ OP_TYPES = ("nand", "nor", "inv")
 
 @dataclasses.dataclass(frozen=True)
 class SramTopology:
+    """One rCiM design point: ``n_macros`` macros of ``macro_kb`` KB each.
+
+    Library entries derive (rows, cols) from ``macro_kb`` via the paper's
+    geometry table; ``geometry=(rows, cols)`` overrides it for programmatic
+    design points outside the table (see `topology_grid` /
+    `from_geometry`).  Macro counts must be 1 (time-multiplexed op types)
+    or a multiple of 3 (op types on dedicated macro groups) — see
+    `mapping.macros_per_type`.
+    """
+
     macro_kb: int
     n_macros: int
+    geometry: tuple[int, int] | None = None
+
+    @classmethod
+    def from_geometry(
+        cls, rows: int, cols: int, n_macros: int
+    ) -> "SramTopology":
+        """Topology from an explicit (rows, cols) macro geometry.
+
+        The macro must hold a whole number of KB (rows*cols % 8192 == 0) so
+        capacity bookkeeping stays exact.
+        """
+        bits = rows * cols
+        if bits <= 0 or bits % 8192:
+            raise ValueError(
+                f"macro geometry {rows}x{cols} is not a whole number of KB"
+            )
+        return cls(bits // 8192, n_macros, geometry=(rows, cols))
 
     @property
     def rows(self) -> int:
+        if self.geometry is not None:
+            return self.geometry[0]
         return _GEOMETRY[self.macro_kb][0]
 
     @property
     def cols(self) -> int:
+        if self.geometry is not None:
+            return self.geometry[1]
         return _GEOMETRY[self.macro_kb][1]
 
     @property
@@ -95,6 +126,8 @@ class SramTopology:
 
     @property
     def name(self) -> str:
+        if self.geometry is not None:
+            return f"({self.rows}x{self.cols})x{self.n_macros}"
         return f"({self.macro_kb}KB)x{self.n_macros}"
 
     @property
@@ -109,6 +142,40 @@ class SramTopology:
 TOPOLOGY_LIBRARY: tuple[SramTopology, ...] = tuple(
     SramTopology(kb, m) for kb in MACRO_SIZES_KB for m in MACRO_COUNTS
 )
+
+
+def topology_grid(
+    rows: Sequence[int] = (128, 256, 512),
+    cols: Sequence[int] = (128, 256, 512, 1024),
+    macro_counts: Sequence[int] = MACRO_COUNTS,
+) -> tuple[SramTopology, ...]:
+    """Programmatic (rows x cols x macros) topology space — the open design
+    grid beyond the paper's 12-entry library.
+
+    Every combination whose macro is a whole number of KB and whose macro
+    count the mapping model supports (1 or a multiple of 3) becomes a
+    design point; the batched engine sweeps the whole grid in one device
+    call (``evaluate_batch`` / ``evaluate_suite``), so grid size is cheap.
+    Deduplicates against geometry collisions and keeps the given order
+    (rows-major, then cols, then macro count).
+    """
+    out: list[SramTopology] = []
+    seen: set[tuple[int, int, int]] = set()
+    for r in rows:
+        for c in cols:
+            if (r * c) % 8192:
+                continue
+            for m in macro_counts:
+                if m != 1 and m % 3:
+                    continue
+                key = (r, c, m)
+                if key in seen:
+                    continue
+                seen.add(key)
+                out.append(SramTopology.from_geometry(r, c, m))
+    if not out:
+        raise ValueError("topology grid is empty")
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------

@@ -24,8 +24,12 @@ Faithfulness notes vs ABC:
 from __future__ import annotations
 
 import itertools
+import json
+import os
+import tempfile
 from functools import lru_cache
-from typing import Callable, Sequence
+from pathlib import Path
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -33,6 +37,7 @@ from .aig import (
     CONST0,
     CONST1,
     Aig,
+    AigStats,
     lit,
     lit_node,
     lit_not,
@@ -40,6 +45,12 @@ from .aig import (
 )
 
 TRANSFORM_NAMES = ("Ba", "Rf", "Rw", "Rs")
+
+#: Version of the transform implementations.  Any change that can alter a
+#: transform's output (even a tie-break) MUST bump this: it keys the
+#: persistent characterization cache, so a bump invalidates every on-disk
+#: entry (CharacterizationCache stores under a per-version directory).
+TRANSFORM_VERSION = 2
 
 
 # ===========================================================================
@@ -281,10 +292,18 @@ def _enumerate_cuts(
     return cuts
 
 
-def _mffc_size(aig: Aig, root: int, leaves: frozenset[int], fanout: np.ndarray) -> int:
+def _mffc_size(
+    aig: Aig,
+    root: int,
+    leaves: frozenset[int],
+    fanout: np.ndarray,
+    cone: list[int] | None = None,
+) -> int:
     """Nodes in the cone of ``root`` (stopping at leaves) whose every fanout
-    stays inside the cone — i.e. nodes freed if the root is replaced."""
-    cone = aig.cone_nodes(root, set(leaves))
+    stays inside the cone — i.e. nodes freed if the root is replaced.
+    ``cone`` may supply a precomputed ``cone_nodes`` walk."""
+    if cone is None:
+        cone = aig.cone_nodes(root, set(leaves))
     cone_set = set(cone)
     # Count fanout references from inside the cone.
     internal_refs: dict[int, int] = {}
@@ -333,9 +352,10 @@ def rewrite(aig: Aig, k: int = 4, max_cuts: int = 8) -> Aig:
             if any(m not in mapping for m in cut):
                 continue
             support = sorted(cut)
-            tt = aig.truth_table(lit(n), support)
+            cone = aig.cone_nodes(n, set(cut))
+            tt = aig.truth_table(lit(n), support, cone=cone)
             cost, plan = synth_plan(tt, len(support))
-            old_cost = _mffc_size(aig, n, frozenset(cut), fanout)
+            old_cost = _mffc_size(aig, n, frozenset(cut), fanout, cone=cone)
             gain = old_cost - cost
             if gain > best_gain:
                 best_gain = gain
@@ -516,9 +536,10 @@ def refactor(aig: Aig, max_leaves: int = 10) -> Aig:
         k = len(leaves)
         if k > 12:
             continue
-        tt = aig.truth_table(lit(n), leaves)
+        cone = aig.cone_nodes(n, set(leaves))
+        tt = aig.truth_table(lit(n), leaves, cone=cone)
         cubes = _isop(tt, _tt_mask(k), k)
-        old_cost = _mffc_size(aig, n, frozenset(leaves), fanout)
+        old_cost = _mffc_size(aig, n, frozenset(leaves), fanout, cone=cone)
         # Estimate new cost: literals-1 per cube + cubes-1 ORs (upper bound).
         est = sum(bin(p | q).count("1") for p, q in cubes) + max(0, len(cubes) - 1)
         if est >= old_cost + 2:
@@ -654,24 +675,349 @@ def enumerate_recipes(
     return out
 
 
+def prefix_nodes(recipes: Sequence[tuple[str, ...]]) -> list[tuple[str, ...]]:
+    """Non-empty prefixes of ``recipes``, deduplicated and ordered by depth
+    — the nodes of the shared-prefix DAG in a valid evaluation order (a
+    node's parent always precedes it)."""
+    seen: set[tuple[str, ...]] = set()
+    out: list[tuple[str, ...]] = []
+    for r in recipes:
+        for i in range(1, len(r) + 1):
+            p = tuple(r[:i])
+            if p not in seen:
+                seen.add(p)
+                out.append(p)
+    out.sort(key=lambda p: (len(p), p))
+    return out
+
+
 class RecipeRunner:
-    """Applies recipes with prefix caching (recipes share prefixes, so the
-    64-recipe sweep needs only 64 distinct transform applications)."""
+    """Applies recipes over the shared-prefix DAG of the recipe set.
+
+    Two memo layers:
+
+      * *prefix* — recipes share prefixes (``Ba,Rf,Rw`` reuses the ``Ba,Rf``
+        intermediate), so the 64-recipe sweep needs at most 64 transform
+        applications instead of 129 chained ones;
+      * *structural* — ``(input fingerprint, transform) -> output
+        fingerprint``.  The transforms are deterministic functions of AIG
+        structure, so when two prefixes converge to the identical AIG
+        (common: transforms hit fixpoints and return their input), their
+        entire subtrees coincide and are computed once.  On the tiny suite
+        this cuts the 64 applications per circuit to 4-55 (`n_applied`).
+
+    Characterizations (`stats`) are memoized per distinct structure, so a
+    circuit whose recipes converge to D distinct AIGs pays D ``ChaAIG``
+    passes, not 65.
+    """
 
     def __init__(self, base: Aig):
         self.base = base
-        self._cache: dict[tuple[str, ...], Aig] = {(): base}
+        base_fp = base.fingerprint()
+        self._node_fp: dict[tuple[str, ...], str] = {(): base_fp}
+        self._store: dict[str, Aig] = {base_fp: base}
+        self._applied: dict[tuple[str, str], str] = {}
+        self._stats: dict[str, AigStats] = {}
+        self.n_applied = 0  # real transform runs (structural misses)
+
+    # -- DAG resolution ------------------------------------------------------
+
+    def run_fp(self, recipe: Sequence[str]) -> str:
+        """Fingerprint of the recipe's result, applying transforms as needed."""
+        recipe = tuple(recipe)
+        hit = self._node_fp.get(recipe)
+        if hit is not None:
+            return hit
+        src_fp = self.run_fp(recipe[:-1])
+        out_fp = self.apply_fp(src_fp, recipe[-1])
+        self._node_fp[recipe] = out_fp
+        return out_fp
+
+    def apply_fp(self, src_fp: str, transform: str) -> str:
+        """Structural-memo transform application on a stored AIG."""
+        key = (src_fp, transform)
+        hit = self._applied.get(key)
+        if hit is not None:
+            return hit
+        out = _TRANSFORM_FNS[transform](self._store[src_fp])
+        self.n_applied += 1
+        out_fp = out.fingerprint()
+        self._applied[key] = out_fp
+        self._store.setdefault(out_fp, out)
+        return out_fp
+
+    def record(
+        self, src_fp: str, transform: str, out: Aig,
+        stats: AigStats | None = None,
+    ) -> str:
+        """Install an externally computed application (process-pool path)."""
+        out_fp = out.fingerprint()
+        self.n_applied += 1
+        self._applied[(src_fp, transform)] = out_fp
+        self._store.setdefault(out_fp, out)
+        if stats is not None:
+            self._stats.setdefault(out_fp, stats)
+        return out_fp
+
+    def aig_for(self, fp: str) -> Aig:
+        return self._store[fp]
+
+    def has_applied(self, src_fp: str, transform: str) -> bool:
+        return (src_fp, transform) in self._applied
+
+    # -- public API ----------------------------------------------------------
 
     def run(self, recipe: Sequence[str]) -> Aig:
-        recipe = tuple(recipe)
-        if recipe in self._cache:
-            return self._cache[recipe]
-        prefix, last = recipe[:-1], recipe[-1]
-        src = self.run(prefix)
-        out = _TRANSFORM_FNS[last](src)
-        self._cache[recipe] = out
-        return out
+        """The recipe's result AIG (Alg. I line 3, ``CreateAIG``)."""
+        return self._store[self.run_fp(recipe)]
+
+    def stats(self, recipe: Sequence[str]) -> AigStats:
+        """The recipe's characterization (Alg. I line 4, ``ChaAIG``),
+        memoized per distinct result structure."""
+        fp = self.run_fp(recipe)
+        hit = self._stats.get(fp)
+        if hit is None:
+            hit = self._stats[fp] = self._store[fp].characterize()
+        return hit
 
 
 def apply_recipe(aig: Aig, recipe: Sequence[str]) -> Aig:
     return RecipeRunner(aig).run(tuple(recipe))
+
+
+# ===========================================================================
+# Persistent characterization cache
+# ===========================================================================
+
+
+def _recipe_key(recipe: tuple[str, ...]) -> str:
+    return ",".join(recipe)
+
+
+class CharacterizationCache:
+    """On-disk ``ChaAIG`` cache keyed by (circuit, recipe, transform version).
+
+    Layout: one JSON file per circuit fingerprint under
+    ``{root}/v{TRANSFORM_VERSION}/{fp}.json``, mapping recipe keys
+    (``"Ba,Rf"``; ``""`` is the baseline) to `AigStats` dicts.  The
+    transform version is both the directory name and embedded in each file,
+    so bumping `TRANSFORM_VERSION` orphans every stale entry instead of
+    serving results from outdated transform implementations.
+
+    Writes are atomic (tempfile + ``os.replace``), so concurrent
+    characterizations at worst redo work — they never corrupt the cache.
+    ``hits`` / ``misses`` count circuit-level lookups (for tests and the
+    cold/warm benchmark reporting).
+    """
+
+    def __init__(self, root: str | os.PathLike):
+        self.root = Path(root)
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, circuit_fp: str) -> Path:
+        return self.root / f"v{TRANSFORM_VERSION}" / f"{circuit_fp}.json"
+
+    def load(self, circuit_fp: str) -> dict[tuple[str, ...], AigStats]:
+        """All cached characterizations for a circuit (empty dict on miss)."""
+        path = self._path(circuit_fp)
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+        if raw.get("transform_version") != TRANSFORM_VERSION:
+            return {}
+        out: dict[tuple[str, ...], AigStats] = {}
+        for key, d in raw.get("recipes", {}).items():
+            recipe = tuple(key.split(",")) if key else ()
+            out[recipe] = AigStats.from_dict(d)
+        return out
+
+    def store(
+        self, circuit_fp: str, cha: Mapping[tuple[str, ...], AigStats]
+    ) -> None:
+        """Merge ``cha`` into the circuit's cache file (atomic replace)."""
+        merged = self.load(circuit_fp)
+        merged.update(cha)
+        path = self._path(circuit_fp)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        payload = dict(
+            transform_version=TRANSFORM_VERSION,
+            circuit=circuit_fp,
+            recipes={
+                _recipe_key(r): s.to_dict() for r, s in sorted(merged.items())
+            },
+        )
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+
+def _as_cache(
+    cache: "CharacterizationCache | str | os.PathLike | None",
+) -> "CharacterizationCache | None":
+    if cache is None or isinstance(cache, CharacterizationCache):
+        return cache
+    return CharacterizationCache(cache)
+
+
+# ===========================================================================
+# Suite-level characterization (parallel front half of Algorithm I)
+# ===========================================================================
+
+
+def _characterize_task(task):
+    """Process-pool worker: apply one transform and characterize the result.
+
+    ``task`` = (circuit name, input fingerprint, transform, input Aig).
+    Returns (name, input fingerprint, transform, result Aig, AigStats) —
+    the parent installs it via `RecipeRunner.record`.
+    """
+    name, src_fp, transform, aig = task
+    out = _TRANSFORM_FNS[transform](aig)
+    return name, src_fp, transform, out, out.characterize()
+
+
+def _resolve_jobs(n_jobs: int | None) -> int:
+    if n_jobs is None:
+        env = os.environ.get("REPRO_CHA_JOBS")
+        if env is not None:
+            n_jobs = int(env)
+        else:
+            n_jobs = min(4, os.cpu_count() or 1)
+    if n_jobs > 1 and not _spawn_safe():
+        n_jobs = 1
+    return max(1, n_jobs)
+
+
+def _spawn_safe() -> bool:
+    """The ``spawn`` start method re-runs ``__main__`` in each worker; when
+    the parent was fed from a pipe/stdin (``__file__`` points nowhere) that
+    re-run crashes, so fall back to serial execution in that case."""
+    import sys
+
+    main_file = getattr(sys.modules.get("__main__"), "__file__", None)
+    return main_file is None or os.path.exists(main_file)
+
+
+def characterize_suite(
+    circuits: Mapping[str, Aig],
+    recipes: Sequence[tuple[str, ...]] | None = None,
+    cache: "CharacterizationCache | str | os.PathLike | None" = None,
+    n_jobs: int | None = None,
+) -> dict[str, dict[tuple[str, ...], AigStats]]:
+    """Front half of Algorithm I (lines 3-6) over a whole benchmark suite.
+
+    For every circuit, creates and characterizes the recipe AIGs (baseline
+    ``()`` included) and returns ``{circuit: {recipe: AigStats}}`` — the
+    input `core.batch.SuiteTable.from_cha` stacks for the vmapped sweep.
+
+    Three cost-reduction layers over naive per-recipe runs:
+
+      * the shared-prefix DAG with structural dedup (`RecipeRunner`);
+      * a persistent on-disk cache (``cache``: a `CharacterizationCache`
+        or a directory path) keyed by (circuit fingerprint, recipe,
+        `TRANSFORM_VERSION`) — warm lookups skip the transforms entirely;
+      * a ``multiprocessing`` pool (``n_jobs`` workers, default
+        ``min(4, cpu_count)``, env override ``REPRO_CHA_JOBS``; ``1``
+        disables) that runs independent prefix branches *and* circuits
+        concurrently, level-synchronously over the DAG depths.
+
+    The pool uses the ``spawn`` start method: characterization is pure
+    numpy/python, but the parent may have jax/XLA threads loaded (the
+    batched back half), and forking such a process is unsafe.
+    """
+    recipes = [
+        tuple(r) for r in (recipes if recipes is not None else enumerate_recipes())
+    ]
+    wanted = list(dict.fromkeys([()] + recipes))
+    cache = _as_cache(cache)
+
+    out: dict[str, dict[tuple[str, ...], AigStats]] = {}
+    runners: dict[str, RecipeRunner] = {}
+    fps: dict[str, str] = {}
+    for name, rtl in circuits.items():
+        fps[name] = rtl.fingerprint()
+        cached = cache.load(fps[name]) if cache is not None else {}
+        if cached and all(r in cached for r in wanted):
+            if cache is not None:
+                cache.hits += 1
+            out[name] = {r: cached[r] for r in wanted}
+            continue
+        if cache is not None:
+            cache.misses += 1
+        runners[name] = RecipeRunner(rtl)
+
+    if runners:
+        _run_suite_dag(runners, wanted, n_jobs)
+        for name, runner in runners.items():
+            cha = {r: runner.stats(r) for r in wanted}
+            out[name] = cha
+            if cache is not None:
+                cache.store(fps[name], cha)
+
+    # Preserve the caller's circuit order.
+    return {name: out[name] for name in circuits}
+
+
+def _run_suite_dag(
+    runners: Mapping[str, RecipeRunner],
+    wanted: Sequence[tuple[str, ...]],
+    n_jobs: int | None,
+) -> None:
+    """Evaluate every prefix node of ``wanted`` in all runners, batching the
+    structurally distinct transform applications of each DAG depth onto a
+    process pool (level-synchronous BFS)."""
+    nodes = prefix_nodes(wanted)
+    if not nodes:
+        return
+    n_jobs = _resolve_jobs(n_jobs)
+    by_depth: dict[int, list[tuple[str, ...]]] = {}
+    for node in nodes:
+        by_depth.setdefault(len(node), []).append(node)
+
+    pool = None
+    try:
+        if n_jobs > 1:
+            import multiprocessing as mp
+
+            pool = mp.get_context("spawn").Pool(n_jobs)
+        for depth in sorted(by_depth):
+            # Distinct (circuit, input structure, transform) applications
+            # this depth needs and does not already know.
+            tasks = []
+            seen: set[tuple[str, str, str]] = set()
+            for name, runner in runners.items():
+                for node in by_depth[depth]:
+                    src_fp = runner.run_fp(node[:-1])
+                    t = node[-1]
+                    if runner.has_applied(src_fp, t):
+                        continue
+                    key = (name, src_fp, t)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    tasks.append((name, src_fp, t, runner.aig_for(src_fp)))
+            if pool is not None and len(tasks) > 1:
+                results = pool.map(_characterize_task, tasks)
+            else:
+                results = [_characterize_task(t) for t in tasks]
+            for name, src_fp, t, aig, stats in results:
+                runners[name].record(src_fp, t, aig, stats)
+            # Resolve this depth's node fingerprints (all applications known).
+            for name, runner in runners.items():
+                for node in by_depth[depth]:
+                    runner.run_fp(node)
+    finally:
+        if pool is not None:
+            pool.close()
+            pool.join()

@@ -26,7 +26,6 @@ every path plus the end-to-end speedups (``total.e2e_*``).
 from __future__ import annotations
 
 import argparse
-import json
 import shutil
 import tempfile
 import time
@@ -40,7 +39,7 @@ from repro.core.transforms import (
     enumerate_recipes,
 )
 
-from .common import Csv, timeit
+from .common import Csv, merge_json, timeit
 
 SMOKE_CIRCUITS = ("adder", "bar", "sqrt", "max")
 SMOKE_RECIPES = 8
@@ -184,8 +183,9 @@ def run(
             all_agree=all(c["backends_agree"] for c in per_circuit.values()),
         ),
     )
-    with open(out_json, "w") as f:
-        json.dump(out, f, indent=1)
+    # Merge-preserving write: other benches (bench_variation's model
+    # sweep) own sibling top-level keys in the same json.
+    merge_json(out_json, out)
     csv.add(
         "explorer/TOTAL", totals["jax_us"],
         f"python_us={totals['python_us']:.0f};jax_us={totals['jax_us']:.0f};"

@@ -1,16 +1,35 @@
-"""Figs 10-12 — Monte-Carlo process/voltage/temperature variation analysis.
+"""Variation analysis: (a) Figs 10-12 Monte-Carlo sense-margin study,
+(b) the energy-model variation sweep (yield FoM) through the batched
+engine.
 
-We cannot re-run Spectre; the bitline-discharge distributions are modeled
-as the Gaussians the paper characterizes (mean/sigma per case, Figs 10-11)
-and we verify the *architectural* claim: the sense margin around
-Vref = VDD/2 keeps the NAND2/NOR2 decision correct at >= 5-sigma over
-5000 samples, for all three topologies and all PVT corners."""
+Part (a): we cannot re-run Spectre; the bitline-discharge distributions
+are modeled as the Gaussians the paper characterizes (mean/sigma per
+case, Figs 10-11) and we verify the *architectural* claim: the sense
+margin around Vref = VDD/2 keeps the NAND2/NOR2 decision correct at
+>= 5-sigma over 5000 samples, for all three topologies and all PVT
+corners.
+
+Part (b) (`run_model_sweep`): N `EnergyModel` variants (seeded
+Monte-Carlo around the calibrated constants) swept through the whole
+circuits x recipes x topologies grid — ONE vmapped call versus the
+serial one-`evaluate_suite`-per-variant loop the old static-model API
+forced.  Cross-checks that every (circuit, variant) winner agrees
+between the vmapped sweep, the serial jax runs, and (optionally) the
+scalar python backend, records the jit trace count, and merges a
+``"variation"`` section into ``BENCH_explorer.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_variation           # full: 9 circuits, 65 recipes, 16 variants
+    PYTHONPATH=src python -m benchmarks.bench_variation --smoke   # CI: 4 circuits, 9 recipes
+"""
 
 from __future__ import annotations
 
+import argparse
+import time
+
 import numpy as np
 
-from .common import Csv
+from .common import Csv, merge_json, timeit
 
 VDD = 1.0
 VREF = VDD / 2
@@ -65,3 +84,186 @@ def run(csv: Csv) -> None:
     csv.add("variation/summary", 0.0,
             f"worst_sense_margin={worst_margin:.1f}sigma(>=3.5 required)")
     assert worst_margin >= 3.5
+
+
+# ---------------------------------------------------------------------------
+# (b) Energy-model variation sweep: vmapped vs serial-per-model
+# ---------------------------------------------------------------------------
+
+SMOKE_CIRCUITS = ("adder", "bar", "sqrt", "max")
+SMOKE_RECIPES = 8
+
+
+def run_model_sweep(
+    csv: Csv | None = None,
+    scale: str = "tiny",
+    only=None,
+    n_recipes: int | None = None,
+    n_variants: int = 16,
+    sigma: float = 0.10,
+    n_iter: int = 3,
+    out_json: str = "BENCH_explorer.json",
+    cache_dir: str | None = None,
+    n_jobs: int | None = None,
+    check_python: bool = False,
+    merge_key: str = "variation",
+) -> dict:
+    """Time the N-variant model sweep both ways and cross-check winners.
+
+    * ``sweep``  — ONE `evaluate_suite` call with a `ModelTable`: the
+      circuits x variants x topologies x recipes hypercube, one compile.
+    * ``serial`` — N `evaluate_suite` calls, one static `EnergyModel`
+      each: what the old static-argnames API forced (and even this is
+      flattering to it — the old engine also paid a fresh jit compile
+      per model, which the serial loop here no longer does).
+
+    Merges the result into ``out_json`` under a ``"variation"`` key.
+    """
+    from repro.core import circuits as C
+    from repro.core.batch import (
+        SuiteTable,
+        TopologyTable,
+        evaluate_suite,
+        trace_counts,
+    )
+    from repro.core.explorer import explore
+    from repro.core.sram import TOPOLOGY_LIBRARY, EnergyModel, ModelTable
+    from repro.core.transforms import characterize_suite, enumerate_recipes
+
+    csv = csv or Csv()
+    recipes = enumerate_recipes()
+    if n_recipes is not None:
+        recipes = recipes[:n_recipes]
+    suite = C.benchmark_suite(scale=scale, only=only)
+
+    t0 = time.time()
+    cha = characterize_suite(suite, recipes, cache=cache_dir, n_jobs=n_jobs)
+    cha_s = time.time() - t0
+
+    suite_table = SuiteTable.from_cha(cha)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    table = ModelTable.monte_carlo(
+        EnergyModel(), n=n_variants, sigma=sigma, seed=0
+    )
+
+    # Cold call: the whole hypercube must cost exactly one new trace.
+    before = trace_counts().get("evaluate_suite", 0)
+    svg = evaluate_suite(suite_table, topos, table)
+    compiles = trace_counts().get("evaluate_suite", 0) - before
+    # Float-only model change: must be served from the jit cache.
+    evaluate_suite(
+        suite_table, topos,
+        ModelTable.monte_carlo(EnergyModel(), n=n_variants, sigma=sigma,
+                               seed=1),
+    )
+    recompiles_on_float_change = (
+        trace_counts().get("evaluate_suite", 0) - before - compiles
+    )
+
+    def run_serial():
+        return [
+            evaluate_suite(suite_table, topos, table.model(v))
+            for v in range(n_variants)
+        ]
+
+    # The cold-call / float-change probes above already warmed the jit
+    # cache (both the V=n_variants and V=1 shapes trace on the serial
+    # loop's first call only), so no extra timeit warmup is needed and
+    # the parity grids double as the serial warmup run.
+    serial_grids = run_serial()
+    t_sweep = timeit(
+        lambda: evaluate_suite(suite_table, topos, table),
+        n_warmup=0, n_iter=n_iter,
+    )
+    t_serial = timeit(run_serial, n_warmup=0, n_iter=n_iter)
+    speedup = t_serial / t_sweep if t_sweep > 0 else float("inf")
+
+    # Winner agreement on every (circuit, variant) — and cell-level
+    # equality of the sweep against each serial static-model run.
+    all_agree = True
+    py_checked = 0
+    for name in svg.circuits:
+        vgrid = svg.variation(name)
+        idx = vgrid.best_indices()
+        for v in range(n_variants):
+            serial = serial_grids[v].grid(name)
+            agree = int(idx[v]) == serial.best_index()
+            agree &= np.array_equal(vgrid.energy_nj[v], serial.energy_nj)
+            agree &= np.array_equal(vgrid.latency_ns[v], serial.latency_ns)
+            if check_python:
+                res_py = explore(
+                    suite[name], cha=cha[name], model=table.model(v),
+                    backend="python",
+                )
+                ti, ri = vgrid.unravel(int(idx[v]))
+                agree &= (
+                    res_py.best.recipe == vgrid.recipes[ri]
+                    and res_py.best.topo == vgrid.topologies[ti]
+                )
+                py_checked += 1
+            all_agree &= agree
+
+    record = dict(
+        scale=scale,
+        n_circuits=len(suite),
+        n_recipes=len(recipes) + 1,
+        n_variants=n_variants,
+        sigma=sigma,
+        implementations=svg.size,
+        characterize_s=round(cha_s, 3),
+        sweep_us=round(t_sweep, 1),
+        serial_us=round(t_serial, 1),
+        speedup=round(speedup, 2),
+        compiles=compiles,
+        recompiles_on_float_change=recompiles_on_float_change,
+        all_agree=bool(all_agree),
+        python_winners_checked=py_checked,
+    )
+
+    merge_json(out_json, {merge_key: record})
+
+    csv.add(
+        f"variation/model_sweep/{merge_key}", t_sweep,
+        f"serial_us={t_serial:.0f};speedup={speedup:.1f}x;"
+        f"variants={n_variants};impls={svg.size};compiles={compiles};"
+        f"agree={all_agree};json={out_json}",
+    )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["tiny", "default", "paper"],
+                    default="tiny")
+    ap.add_argument("--recipes", type=int, default=None,
+                    help="limit recipe count (default: all 64)")
+    ap.add_argument("--variants", type=int, default=16,
+                    help="Monte-Carlo model variants")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: few circuits, few recipes, python "
+                         "winner cross-check on every (circuit, variant)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent characterization cache directory")
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_explorer.json")
+    ap.add_argument("--merge-key", default="variation",
+                    help="key the record is merged under in --out")
+    ap.add_argument("--skip-pvt", action="store_true",
+                    help="skip the Figs 10-12 sense-margin Monte-Carlo")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    csv = Csv()
+    if not args.skip_pvt:
+        run(csv)
+    kw = dict(scale=args.scale, n_recipes=args.recipes,
+              n_variants=args.variants, out_json=args.out,
+              cache_dir=args.cache_dir, n_jobs=args.jobs,
+              merge_key=args.merge_key)
+    if args.smoke:
+        kw.update(scale="tiny", only=SMOKE_CIRCUITS, n_recipes=SMOKE_RECIPES,
+                  n_iter=1, check_python=True)
+    run_model_sweep(csv, **kw)
+
+
+if __name__ == "__main__":
+    main()

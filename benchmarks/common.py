@@ -1,9 +1,31 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, json merging."""
 
 from __future__ import annotations
 
+import json
 import os
 import time
+
+
+def merge_json(path: str, updates: dict) -> dict:
+    """Merge ``updates`` into the json file at ``path`` (several benches
+    co-own top-level keys of BENCH_explorer.json).  A corrupt/truncated
+    previous file is discarded rather than crashing after a long run,
+    and the write is temp-file + atomic replace so an interrupted bench
+    can never truncate the other benches' recorded sections."""
+    merged: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            merged = {}
+    merged.update(updates)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(merged, f, indent=1)
+    os.replace(tmp, path)
+    return merged
 
 
 def timeit(fn, *args, n_warmup: int = 1, n_iter: int = 3, **kw) -> float:

@@ -48,6 +48,12 @@ def main() -> None:
         from . import bench_variation
 
         bench_variation.run(csv)
+        # energy-model variation sweep (yield FoM): vmapped vs serial,
+        # merged into runs/BENCH_explorer_variation.json
+        bench_variation.run_model_sweep(
+            csv, scale=args.scale, cache_dir=cache,
+            out_json="runs/BENCH_explorer_variation.json",
+        )
     if "kernel" in which:
         from . import bench_kernel
 

@@ -7,6 +7,11 @@
     # near-instant (the sweep itself is one vmapped device call)
     PYTHONPATH=src python examples/cim_explore.py --all --cache runs/cha_cache
 
+    # energy-model variation: sweep process corners / Monte-Carlo samples
+    # through the same single compile and report a yield summary
+    PYTHONPATH=src python examples/cim_explore.py --all --model-sweep mc \
+        --model-variants 32
+
 Prints the Table-I-style row for each circuit plus the best/worst spread.
 """
 
@@ -14,6 +19,7 @@ import argparse
 
 from repro.core import circuits as C
 from repro.core.explorer import best_worst, explore_suite
+from repro.core.sram import EnergyModel, ModelTable
 
 
 def main():
@@ -29,13 +35,32 @@ def main():
                     help="persistent characterization cache directory")
     ap.add_argument("--jobs", type=int, default=None,
                     help="characterization workers (default: min(4, cpus))")
+    ap.add_argument("--model-sweep", choices=["corners", "sensitivity", "mc"],
+                    default=None,
+                    help="sweep EnergyModel variants (process corners, "
+                         "one-at-a-time sensitivity, or Monte-Carlo) through "
+                         "the same compile and report a yield summary")
+    ap.add_argument("--model-variants", type=int, default=16,
+                    help="Monte-Carlo sample count (--model-sweep mc)")
+    ap.add_argument("--model-sigma", type=float, default=0.05,
+                    help="relative sigma/spread for the model sweep")
     args = ap.parse_args()
+
+    model_sweep = None
+    if args.model_sweep == "corners":
+        model_sweep = ModelTable.corners(EnergyModel(), spread=args.model_sigma)
+    elif args.model_sweep == "sensitivity":
+        model_sweep = ModelTable.sensitivity(EnergyModel(), rel=args.model_sigma)
+    elif args.model_sweep == "mc":
+        model_sweep = ModelTable.monte_carlo(
+            EnergyModel(), n=args.model_variants, sigma=args.model_sigma, seed=0
+        )
 
     names = list(C._GENERATORS) if (args.all or args.circuit == "all") else [args.circuit]
     suite = C.benchmark_suite(scale=args.scale, only=names)
     results = explore_suite(
         suite, max_latency_ns=args.max_latency_ns, backend=args.backend,
-        cache=args.cache, n_jobs=args.jobs,
+        cache=args.cache, n_jobs=args.jobs, model_sweep=model_sweep,
     )
     for name, res in results.items():
         rtl = suite[name]
@@ -48,6 +73,14 @@ def main():
         saving = 100 * (1 - b.metrics.energy_nj / w.metrics.energy_nj)
         print(f"  best-vs-worst energy saving: {saving:.1f}% "
               f"(paper avg 89.12%)")
+        if res.variation is not None:
+            var = res.variation
+            print(f"  model sweep ({var.n_variants} variants): "
+                  f"best_yield={var.best_yield:.2f} "
+                  f"latency_yield={var.latency_yield:.2f}")
+            for impl, share in sorted(var.winner_share.items(),
+                                      key=lambda kv: -kv[1]):
+                print(f"    {impl:32s} wins {share:.0%} of variants")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + docs link check + suite-level smoke bench.
+# CI entry point: tier-1 tests + docs link check + suite-level smoke bench
+# + model-variation smoke bench.
 #
-#   scripts/ci.sh            # tests + docs check + smoke bench
+#   scripts/ci.sh            # tests + docs check + smoke benches
 #   scripts/ci.sh --no-bench # tests + docs check only
 #
 # Uses the PYTHONPATH=src layout (works without installation; `pip
@@ -10,16 +11,29 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+mkdir -p runs
+
+# The property suites (tests/test_transforms.py, test_variation.py, ...)
+# need hypothesis (the pyproject `test` extra); install it when the
+# environment doesn't ship it so those suites actually run in CI.  On
+# air-gapped runners the install fails gracefully and the suites skip —
+# the skip count below makes that visible instead of silent.
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+    echo "== installing hypothesis (test extra) =="
+    python -m pip install -q hypothesis \
+        || echo "warning: could not install hypothesis (offline?); property suites will be SKIPPED"
+fi
 
 echo "== tier-1 tests =="
-python -m pytest -x -q
+python -m pytest -x -q -rs 2>&1 | tee runs/pytest.log
+n_skipped=$(grep -Eo '[0-9]+ skipped' runs/pytest.log | tail -1 | grep -Eo '[0-9]+' || echo 0)
+echo "skipped tests: ${n_skipped} (see runs/pytest.log for reasons)"
 
 echo "== docs link check =="
 python scripts/check_links.py
 
 if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== suite-level explorer bench (smoke, cache cold + warm) =="
-    mkdir -p runs
     python -m benchmarks.bench_explorer --smoke --out runs/BENCH_explorer_smoke.json
     python - <<'EOF'
 import json
@@ -34,6 +48,29 @@ print(f"suite sweep speedup: {total['speedup']}x "
       f"(python {total['python_us']:.0f}us -> jax {total['jax_us']:.0f}us); "
       f"characterize cold {cold:.2f}s -> warm {warm:.3f}s; "
       f"e2e cold {total['e2e']['cold_s']}s / warm {total['e2e']['warm_s']}s")
+EOF
+
+    echo "== model-variation sweep bench (smoke) =="
+    python -m benchmarks.bench_variation --smoke --skip-pvt \
+        --out runs/BENCH_explorer_smoke.json
+    python - <<'EOF'
+import json
+with open("runs/BENCH_explorer_smoke.json") as f:
+    v = json.load(f)["variation"]
+assert v["all_agree"], \
+    "backends disagree on a (circuit, variant) winner"
+assert v["python_winners_checked"] > 0, "python cross-check did not run"
+assert v["speedup"] > 1.0, \
+    f"vmapped model sweep ({v['sweep_us']}us) must beat the serial " \
+    f"per-model loop ({v['serial_us']}us)"
+assert v["compiles"] == 1, \
+    f"an N-variant sweep must cost exactly one jit trace, got {v['compiles']}"
+assert v["recompiles_on_float_change"] == 0, \
+    "changing only model floats retriggered tracing"
+print(f"model sweep: {v['n_variants']} variants x "
+      f"{v['implementations'] // v['n_variants']} designs in "
+      f"{v['sweep_us']:.0f}us, serial {v['serial_us']:.0f}us "
+      f"-> {v['speedup']}x, compiles={v['compiles']}")
 EOF
 fi
 echo "CI OK"

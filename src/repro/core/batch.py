@@ -14,7 +14,9 @@ ChaAIG -> Evaluate -> FilterEnergy sweep is one jitted `jax.numpy` pass:
   * ``schedule_batch`` — `mapping.schedule_stats` (both the "list" and
     "levels" disciplines) over the full recipe x topology grid;
   * ``evaluate_batch`` — `sram.evaluate` (both "paper" and "physical"
-    accounting modes) over the grid, yielding an ``ExplorationGrid``;
+    accounting modes) over the grid, yielding an ``ExplorationGrid`` —
+    or, given a `sram.ModelTable`, a ``VariationGrid`` with a leading
+    model-variant axis;
   * ``select_best`` / ``select_best_worst`` — the shared capacity /
     latency admissibility filter + energy argmin/argmax used by
     `explorer`, `mesh_explorer`, and the benchmarks.
@@ -28,15 +30,22 @@ float64 via `jax.experimental.enable_x64`, so ``backend="jax"`` matches
 iteration order of the scalar loops — so argmin tie-breaking also
 matches.
 
-The jitted core recompiles per (grid shape, model, discipline, mode);
+The energy-model constants are *traced* operands (`ModelParams`, a
+pytree of float64 arrays vmapped over the variant axis), not jit
+statics: the jitted core recompiles only per (grid shape, n_variants,
+discipline, mode).  Changing model floats never retriggers tracing, and
+one compile serves circuits x recipes x topologies x model-variants.
 ``WorkloadTable`` pads the level axis to a multiple of 64 to keep the
-number of distinct shapes (and hence compiles) small across circuits.
+number of distinct shapes (and hence compiles) small across circuits;
+`trace_counts` exposes per-kernel trace counters so tests can pin the
+no-recompile contract.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Mapping, Sequence
+from typing import Mapping, NamedTuple, Sequence
 
 import numpy as np
 
@@ -45,7 +54,9 @@ from .mapping import BITS_PER_GATE, macros_per_type
 from .sram import (
     OP_TYPES,
     EnergyModel,
+    ModelTable,
     SramTopology,
+    area_mm2_arrays,
     paper_energy_nj,
     paper_power_mw,
     physical_energy_nj,
@@ -77,6 +88,51 @@ def _load_jax() -> None:
             "use backend='python' instead"
         ) from e
     jax, jnp, enable_x64 = _jax, _jnp, _enable_x64
+
+
+# Per-kernel jit trace counters.  The counter lines inside the kernel
+# bodies execute only while jax is *tracing* (never on cached dispatch),
+# so a test can assert that an N-variant sweep — or a float-only model
+# change — costs exactly one (or zero) compilations.
+TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def trace_counts() -> dict[str, int]:
+    """Snapshot of the per-kernel jit trace counters."""
+    return dict(TRACE_COUNTS)
+
+
+class ModelParams(NamedTuple):
+    """The `EnergyModel` constants the evaluate kernels read, as float64
+    arrays with a leading variant axis — the *traced* (dynamic) model
+    operand.  A NamedTuple so it is a jax pytree and the `sram` mode
+    helpers' ``model.<field>`` attribute reads work unchanged inside the
+    kernel."""
+
+    f_clk_hz: np.ndarray            # (V,)
+    e_op_marginal_fj: np.ndarray    # (V, 3)
+    p_ctrl_mw: np.ndarray           # (V,)
+    e_macro_cycle_fj: np.ndarray    # (V,)
+    e_col_cycle_fj: np.ndarray      # (V,)
+    alpha_mw_per_level: np.ndarray  # (V,)
+    pipeline_utilization: np.ndarray  # (V,)
+
+
+def _model_params(table: ModelTable) -> ModelParams:
+    return ModelParams(
+        **{
+            f: np.asarray(getattr(table, f), dtype=np.float64)
+            for f in ModelParams._fields
+        }
+    )
+
+
+def _as_table(model: "EnergyModel | ModelTable | None") -> tuple[ModelTable, bool]:
+    """Normalize a model argument to a `ModelTable`; the bool flags
+    whether the caller asked for a variant sweep (vs a single model)."""
+    if isinstance(model, ModelTable):
+        return model, True
+    return ModelTable.from_models([model or EnergyModel()]), False
 
 
 # ---------------------------------------------------------------------------
@@ -127,8 +183,21 @@ class TopologyTable:
     def __len__(self) -> int:
         return len(self.topologies)
 
-    def area_mm2(self, model: EnergyModel) -> np.ndarray:
-        return np.array([t.area_mm2(model) for t in self.topologies])
+    def area_mm2(self, model: "EnergyModel | ModelTable") -> np.ndarray:
+        """Vectorized `SramTopology.area_mm2` — the same
+        `sram.area_mm2_arrays` expression over the stacked ``total_bits``:
+        ``(T,)`` for one `EnergyModel`, ``(V, T)`` for a `ModelTable`."""
+        if isinstance(model, ModelTable):
+            return area_mm2_arrays(
+                self.total_bits[None, :],
+                model.bitcell_um2[:, None],
+                model.periphery_overhead[:, None],
+            )
+        return area_mm2_arrays(
+            self.total_bits.astype(np.float64),
+            model.bitcell_um2,
+            model.periphery_overhead,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -341,6 +410,7 @@ def _schedule_core(ops, n_levels, width, mpt, is_single, total_bits, discipline)
 
 def _make_schedule_grid():
     def fn(ops, n_levels, width, mpt, is_single, total_bits, discipline):
+        TRACE_COUNTS["schedule_grid"] += 1
         return _schedule_core(
             ops, n_levels, width, mpt, is_single, total_bits, discipline
         )
@@ -348,19 +418,34 @@ def _make_schedule_grid():
     return jax.jit(fn, static_argnames=("discipline",))
 
 
-def _make_evaluate_grid_fn():
-    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
-           model, discipline, mode):
-        cycles, active, fits = _schedule_core(
-            ops, n_levels, width, mpt, is_single, total_bits, discipline
-        )
-        # Explicit float64 casts so parity with the scalar path does not
-        # hinge on int/weak-float promotion rules.
-        t_ns = cycles.astype(jnp.float64) / model.f_clk_hz * 1e9
-        tot = ops.sum(axis=1)                            # (R, 3)
-        e_marg = jnp.asarray(model.e_op_marginal_fj, dtype=jnp.float64)
-        e_ops_fj = (tot * e_marg[None, :]).sum(axis=-1)  # (R,)
-        n_lvl = n_levels.astype(jnp.float64)[:, None]
+def _evaluate_core(ops, n_levels, width, mpt, is_single, total_bits, cols,
+                   params, discipline, mode):
+    """Schedule once, then evaluate every model variant over it.
+
+    ``params`` is a `ModelParams` pytree of *traced* float64 arrays with a
+    leading variant axis; the schedule (exact integers, model-free) is
+    computed once and closed over by the vmapped per-variant metrics, so
+    the variant axis only multiplies the cheap float arithmetic.
+
+    Returns ``cycles`` / ``active_macro_cycles`` / ``fits`` as (R, T)
+    arrays and each metric as a (V, R, T) array.
+    """
+    cycles, active, fits = _schedule_core(
+        ops, n_levels, width, mpt, is_single, total_bits, discipline
+    )
+    tot = ops.sum(axis=1)                                # (R, 3)
+    gates = tot.sum(axis=-1)                             # (R,)
+    n_lvl = n_levels.astype(jnp.float64)[:, None]
+    # Explicit float64 casts so parity with the scalar path does not
+    # hinge on int/weak-float promotion rules.
+    cycles_f = cycles.astype(jnp.float64)
+
+    def metrics(model):
+        # `model` is one ModelParams row: scalar leaves + a (3,) op vector.
+        # The sram mode helpers read it via the same attribute names as a
+        # scalar EnergyModel, so both paths share one set of expressions.
+        t_ns = cycles_f / model.f_clk_hz * 1e9
+        e_ops_fj = (tot * model.e_op_marginal_fj[None, :]).sum(axis=-1)
 
         if mode == "paper":
             p_mw = paper_power_mw(n_lvl, model) * jnp.ones_like(t_ns)
@@ -373,7 +458,6 @@ def _make_evaluate_grid_fn():
         else:
             raise ValueError(f"unknown mode {mode!r}")
 
-        gates = tot.sum(axis=-1)
         thr_gops = jnp.where(
             t_ns > 0,
             gates[:, None] / (t_ns * 1e-9) / 1e9 * model.pipeline_utilization,
@@ -381,9 +465,6 @@ def _make_evaluate_grid_fn():
         )
         tops_w = jnp.where(p_mw > 0, (thr_gops / 1e3) / (p_mw * 1e-3), 0.0)
         return dict(
-            cycles=cycles,
-            active_macro_cycles=active,
-            fits=fits,
             latency_ns=t_ns,
             energy_nj=e_nj,
             power_mw=p_mw,
@@ -391,17 +472,27 @@ def _make_evaluate_grid_fn():
             tops_per_watt=tops_w,
         )
 
-    return fn
+    out = jax.vmap(metrics)(params)                      # each (V, R, T)
+    out.update(cycles=cycles, active_macro_cycles=active, fits=fits)
+    return out
 
 
 def _make_evaluate_grid():
-    return jax.jit(
-        _make_evaluate_grid_fn(), static_argnames=("model", "discipline", "mode")
-    )
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
+           params, discipline, mode):
+        TRACE_COUNTS["evaluate_grid"] += 1
+        return _evaluate_core(
+            ops, n_levels, width, mpt, is_single, total_bits, cols,
+            params, discipline, mode,
+        )
+
+    return jax.jit(fn, static_argnames=("discipline", "mode"))
 
 
 def _make_schedule_suite():
     def fn(ops, n_levels, width, mpt, is_single, total_bits, discipline):
+        TRACE_COUNTS["schedule_suite"] += 1
+
         def per_circuit(o, nl):
             return _schedule_core(
                 o, nl, width, mpt, is_single, total_bits, discipline
@@ -413,19 +504,19 @@ def _make_schedule_suite():
 
 
 def _make_evaluate_suite():
-    evaluate_grid_fn = _make_evaluate_grid_fn()
-
     def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
-           model, discipline, mode):
+           params, discipline, mode):
+        TRACE_COUNTS["evaluate_suite"] += 1
+
         def per_circuit(o, nl):
-            return evaluate_grid_fn(
+            return _evaluate_core(
                 o, nl, width, mpt, is_single, total_bits, cols,
-                model, discipline, mode,
+                params, discipline, mode,
             )
 
         return jax.vmap(per_circuit)(ops, n_levels)
 
-    return jax.jit(fn, static_argnames=("model", "discipline", "mode"))
+    return jax.jit(fn, static_argnames=("discipline", "mode"))
 
 
 _SCHEDULE_GRID = None
@@ -508,6 +599,86 @@ class ExplorationGrid:
         return select_best_worst(self.energy_nj, self.fits)
 
 
+@dataclasses.dataclass(frozen=True)
+class VariationGrid:
+    """One circuit's recipe x topology sweep across every `ModelTable`
+    variant — the batched analogue of N `ExplorationGrid`s that cost one
+    compile and one device call.
+
+    Schedules (``cycles`` / ``active_macro_cycles`` / ``fits``) are
+    model-free exact integers, stored once as ``(T, R)``; each metric
+    carries a leading variant axis ``(V, T, R)``.  ``grid(v)`` slices
+    variant ``v`` back out as a standard `ExplorationGrid` (numpy views).
+    """
+
+    recipes: tuple[tuple[str, ...], ...]
+    topologies: tuple[SramTopology, ...]
+    models: ModelTable
+    cycles: np.ndarray               # (T, R) int
+    active_macro_cycles: np.ndarray  # (T, R) int
+    fits: np.ndarray                 # (T, R) bool
+    latency_ns: np.ndarray           # (V, T, R)
+    energy_nj: np.ndarray            # (V, T, R)
+    power_mw: np.ndarray             # (V, T, R)
+    throughput_gops: np.ndarray      # (V, T, R)
+    tops_per_watt: np.ndarray        # (V, T, R)
+    area_mm2: np.ndarray             # (V, T)
+    feasible: np.ndarray             # (T,)
+    mode: str
+    discipline: str
+
+    @property
+    def n_variants(self) -> int:
+        return len(self.models)
+
+    def __len__(self) -> int:
+        return len(self.models)
+
+    def unravel(self, flat_index: int) -> tuple[int, int]:
+        """Flat (topology-major) index -> (topology_idx, recipe_idx)."""
+        n_r = len(self.recipes)
+        return flat_index // n_r, flat_index % n_r
+
+    def grid(self, v: int) -> ExplorationGrid:
+        """Variant ``v``'s sweep as a standard `ExplorationGrid`."""
+        return ExplorationGrid(
+            recipes=self.recipes,
+            topologies=self.topologies,
+            cycles=self.cycles,
+            active_macro_cycles=self.active_macro_cycles,
+            fits=self.fits,
+            latency_ns=self.latency_ns[v],
+            energy_nj=self.energy_nj[v],
+            power_mw=self.power_mw[v],
+            throughput_gops=self.throughput_gops[v],
+            tops_per_watt=self.tops_per_watt[v],
+            area_mm2=self.area_mm2[v],
+            feasible=self.feasible,
+            mode=self.mode,
+            discipline=self.discipline,
+            model=self.models.model(v),
+        )
+
+    def best_indices(self, max_latency_ns: float | None = None) -> np.ndarray:
+        """Per-variant `select_best` winners: ``(V,)`` flat
+        (topology-major) indices, same tiering/tie-breaking as the
+        static-model path on every variant."""
+        feas = np.broadcast_to(self.feasible[:, None], self.fits.shape)
+        return np.array(
+            [
+                select_best(
+                    self.energy_nj[v],
+                    self.fits,
+                    latency=self.latency_ns[v],
+                    max_latency=max_latency_ns,
+                    feasible=feas,
+                )
+                for v in range(len(self.models))
+            ],
+            dtype=np.int64,
+        )
+
+
 def schedule_batch(
     work: WorkloadTable,
     topos: TopologyTable,
@@ -517,7 +688,8 @@ def schedule_batch(
 
     Returns ``(n_topologies, n_recipes)`` arrays: ``cycles``,
     ``active_macro_cycles``, ``fits``.  (Pipelined writeback only — the
-    scalar path's default.)
+    scalar path's default.)  Schedules are model-free, so there is no
+    variant axis here.
     """
     schedule_grid, _ = _grids()
     with enable_x64():
@@ -533,36 +705,67 @@ def schedule_batch(
         )
 
 
+_SCHED_KEYS = ("cycles", "active_macro_cycles", "fits")
+_METRIC_KEYS = (
+    "latency_ns", "energy_nj", "power_mw", "throughput_gops", "tops_per_watt"
+)
+
+
 def evaluate_batch(
     work: WorkloadTable,
     topos: TopologyTable,
-    model: EnergyModel | None = None,
+    model: "EnergyModel | ModelTable | None" = None,
     mode: str = "physical",
     discipline: str = "list",
     feasible: np.ndarray | None = None,
-) -> ExplorationGrid:
+) -> "ExplorationGrid | VariationGrid":
     """Schedule + evaluate the full recipe x topology grid in one jitted
-    float64 pass; the batched ``sram.evaluate``."""
+    float64 pass; the batched ``sram.evaluate``.
+
+    ``model`` may be a single `EnergyModel` (returns an
+    `ExplorationGrid`, as before) or a `sram.ModelTable` of variants
+    (returns a `VariationGrid` with a leading variant axis).  Either way
+    the model constants are traced operands — the kernel never recompiles
+    on a model change, only on a new (grid shape, n_variants,
+    discipline, mode).
+    """
     _, evaluate_grid = _grids()
-    model = model or EnergyModel()
+    table, is_sweep = _as_table(model)
     with enable_x64():
         out = evaluate_grid(
             work.ops, work.n_levels, topos.ops_per_cycle,
             topos.macros_per_type, topos.is_single, topos.total_bits,
-            topos.cols, model, discipline, mode,
+            topos.cols, _model_params(table), discipline, mode,
         )
-        out = {k: np.asarray(v).T for k, v in out.items()}
+        sched = {k: np.asarray(out[k]).T for k in _SCHED_KEYS}
+        mets = {
+            k: np.swapaxes(np.asarray(out[k]), 1, 2) for k in _METRIC_KEYS
+        }
     if feasible is None:
         feasible = np.ones(len(topos), dtype=bool)
-    return ExplorationGrid(
+    feasible = np.asarray(feasible, dtype=bool)
+    if not is_sweep:
+        return ExplorationGrid(
+            recipes=work.recipes,
+            topologies=topos.topologies,
+            area_mm2=topos.area_mm2(table.model(0)),
+            feasible=feasible,
+            mode=mode,
+            discipline=discipline,
+            model=model if isinstance(model, EnergyModel) else table.model(0),
+            **sched,
+            **{k: v[0] for k, v in mets.items()},
+        )
+    return VariationGrid(
         recipes=work.recipes,
         topologies=topos.topologies,
-        area_mm2=topos.area_mm2(model),
-        feasible=np.asarray(feasible, dtype=bool),
+        models=table,
+        area_mm2=topos.area_mm2(table),
+        feasible=feasible,
         mode=mode,
         discipline=discipline,
-        model=model,
-        **out,
+        **sched,
+        **mets,
     )
 
 
@@ -656,30 +859,126 @@ def schedule_suite(
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class SuiteVariationGrid:
+    """The whole suite swept across every model variant: circuits x
+    model-variants x topologies x recipes from ONE compile and ONE device
+    call — the fourth (variant) axis of the rapid-assessment engine.
+
+    Schedules are model-free ``(C, T, R)`` exact integers; metrics are
+    ``(C, V, T, R)``.  ``variation(circuit)`` slices one circuit's
+    `VariationGrid`; ``suite(v)`` slices one variant's `SuiteGrid`.
+    """
+
+    circuits: tuple[str, ...]
+    recipes: tuple[tuple[str, ...], ...]
+    topologies: tuple[SramTopology, ...]
+    models: ModelTable
+    cycles: np.ndarray               # (C, T, R) int
+    active_macro_cycles: np.ndarray  # (C, T, R) int
+    fits: np.ndarray                 # (C, T, R) bool
+    latency_ns: np.ndarray           # (C, V, T, R)
+    energy_nj: np.ndarray            # (C, V, T, R)
+    power_mw: np.ndarray             # (C, V, T, R)
+    throughput_gops: np.ndarray      # (C, V, T, R)
+    tops_per_watt: np.ndarray        # (C, V, T, R)
+    area_mm2: np.ndarray             # (V, T)
+    feasible: np.ndarray             # (C, T)
+    mode: str
+    discipline: str
+
+    @property
+    def n_variants(self) -> int:
+        return len(self.models)
+
+    @property
+    def size(self) -> int:
+        """Total swept implementations (C x V x T x R)."""
+        return self.energy_nj.size
+
+    def circuit_index(self, circuit: str | int) -> int:
+        if isinstance(circuit, int):
+            return circuit
+        return self.circuits.index(circuit)
+
+    def variation(self, circuit: str | int) -> VariationGrid:
+        """One circuit's ``(V, T, R)`` sweep as a `VariationGrid`."""
+        c = self.circuit_index(circuit)
+        return VariationGrid(
+            recipes=self.recipes,
+            topologies=self.topologies,
+            models=self.models,
+            cycles=self.cycles[c],
+            active_macro_cycles=self.active_macro_cycles[c],
+            fits=self.fits[c],
+            latency_ns=self.latency_ns[c],
+            energy_nj=self.energy_nj[c],
+            power_mw=self.power_mw[c],
+            throughput_gops=self.throughput_gops[c],
+            tops_per_watt=self.tops_per_watt[c],
+            area_mm2=self.area_mm2,
+            feasible=self.feasible[c],
+            mode=self.mode,
+            discipline=self.discipline,
+        )
+
+    def suite(self, v: int) -> SuiteGrid:
+        """One model variant's suite sweep as a standard `SuiteGrid`."""
+        return SuiteGrid(
+            circuits=self.circuits,
+            recipes=self.recipes,
+            topologies=self.topologies,
+            cycles=self.cycles,
+            active_macro_cycles=self.active_macro_cycles,
+            fits=self.fits,
+            latency_ns=self.latency_ns[:, v],
+            energy_nj=self.energy_nj[:, v],
+            power_mw=self.power_mw[:, v],
+            throughput_gops=self.throughput_gops[:, v],
+            tops_per_watt=self.tops_per_watt[:, v],
+            area_mm2=self.area_mm2[v],
+            feasible=self.feasible,
+            mode=self.mode,
+            discipline=self.discipline,
+            model=self.models.model(v),
+        )
+
+
 def evaluate_suite(
     suite: SuiteTable,
     topos: TopologyTable,
-    model: EnergyModel | None = None,
+    model: "EnergyModel | ModelTable | None" = None,
     mode: str = "physical",
     discipline: str = "list",
     feasible: np.ndarray | None = None,
-) -> SuiteGrid:
+) -> "SuiteGrid | SuiteVariationGrid":
     """Schedule + evaluate circuits x recipes x topologies in one jitted
     float64 pass — the suite-level `evaluate_batch`.
+
+    ``model`` may be a single `EnergyModel` (returns a `SuiteGrid`) or a
+    `sram.ModelTable` (returns a `SuiteVariationGrid` with a leading
+    variant axis on every metric): the model constants are traced
+    operands, so the whole circuits x variants x topologies x recipes
+    hypercube is one compile and one device call.
 
     ``feasible``: optional ``(n_circuits, n_topologies)`` bool mask of
     capacity-feasible topologies per circuit (Alg. I line 9); defaults to
     all-feasible, as in `evaluate_batch`.
     """
     _, evaluate = _suite_grids()
-    model = model or EnergyModel()
+    table, is_sweep = _as_table(model)
     with enable_x64():
         out = evaluate(
             suite.ops, suite.n_levels, topos.ops_per_cycle,
             topos.macros_per_type, topos.is_single, topos.total_bits,
-            topos.cols, model, discipline, mode,
+            topos.cols, _model_params(table), discipline, mode,
         )
-        out = {k: np.swapaxes(np.asarray(v), 1, 2) for k, v in out.items()}
+        sched = {
+            k: np.swapaxes(np.asarray(out[k]), 1, 2) for k in _SCHED_KEYS
+        }
+        mets = {
+            k: np.swapaxes(np.asarray(out[k]), 2, 3) for k in _METRIC_KEYS
+        }
     if feasible is None:
         feasible = np.ones((len(suite), len(topos)), dtype=bool)
     feasible = np.asarray(feasible, dtype=bool)
@@ -688,16 +987,30 @@ def evaluate_suite(
             f"feasible must be (n_circuits, n_topologies)="
             f"{(len(suite), len(topos))}, got {feasible.shape}"
         )
-    return SuiteGrid(
+    if not is_sweep:
+        return SuiteGrid(
+            circuits=suite.circuits,
+            recipes=suite.recipes,
+            topologies=topos.topologies,
+            area_mm2=topos.area_mm2(table.model(0)),
+            feasible=feasible,
+            mode=mode,
+            discipline=discipline,
+            model=model if isinstance(model, EnergyModel) else table.model(0),
+            **sched,
+            **{k: v[:, 0] for k, v in mets.items()},
+        )
+    return SuiteVariationGrid(
         circuits=suite.circuits,
         recipes=suite.recipes,
         topologies=topos.topologies,
-        area_mm2=topos.area_mm2(model),
+        models=table,
+        area_mm2=topos.area_mm2(table),
         feasible=feasible,
         mode=mode,
         discipline=discipline,
-        model=model,
-        **out,
+        **sched,
+        **mets,
     )
 
 
@@ -750,6 +1063,18 @@ def select_best(
     raise AssertionError("unreachable")
 
 
+def winner_summary(winner_keys: Sequence[str]) -> tuple[dict[str, float], float]:
+    """Yield arithmetic shared by the SRAM and mesh variation summaries:
+    the share of variants each winning implementation takes, and the
+    fraction of variants agreeing with the nominal (first) winner."""
+    if not winner_keys:
+        raise ValueError("winner_summary on an empty sweep")
+    counts = collections.Counter(winner_keys)
+    n = len(winner_keys)
+    share = {k: c / n for k, c in counts.items()}
+    return share, counts[winner_keys[0]] / n
+
+
 def select_best_worst(energy, fits) -> tuple[int, int]:
     """Table I companion: (argmin, argmax) energy over the fitting pool
     (or over everything when nothing fits)."""
@@ -769,13 +1094,35 @@ def select_best_worst(energy, fits) -> tuple[int, int]:
 # ---------------------------------------------------------------------------
 
 
+class _BroadcastModel(NamedTuple):
+    """`table2_arrays`-compatible view of a `ModelTable` with every field
+    shaped (V, 1) — so the same expressions broadcast against (T,)
+    topology arrays into (V, T) outputs."""
+
+    f_clk_hz: np.ndarray
+    e_op_fj: tuple
+    p_ctrl_mw: np.ndarray
+    pipeline_utilization: np.ndarray
+
+
 def table2_batch(
     topos: TopologyTable,
-    model: EnergyModel | None = None,
+    model: "EnergyModel | ModelTable | None" = None,
     nor_fraction: float = 0.5,
 ) -> dict[str, np.ndarray]:
     """Vectorized ``sram.table2_metrics`` over a TopologyTable — the same
-    ``sram.table2_arrays`` expressions, one array pass, (T,) outputs."""
+    ``sram.table2_arrays`` expressions, one array pass.  Outputs are (T,)
+    for a single `EnergyModel`, (V, T) for a `ModelTable` of variants."""
     model = model or EnergyModel()
     w = topos.ops_per_cycle.astype(float) * topos.n_macros
+    if isinstance(model, ModelTable):
+        shim = _BroadcastModel(
+            f_clk_hz=model.f_clk_hz[:, None],
+            e_op_fj=tuple(model.e_op_fj[:, k: k + 1] for k in range(3)),
+            p_ctrl_mw=model.p_ctrl_mw[:, None],
+            pipeline_utilization=model.pipeline_utilization[:, None],
+        )
+        return table2_arrays(
+            w[None, :], topos.area_mm2(model), shim, nor_fraction
+        )
     return table2_arrays(w, topos.area_mm2(model), model, nor_fraction)

@@ -50,15 +50,18 @@ from .batch import (
     ExplorationGrid,
     SuiteTable,
     TopologyTable,
+    VariationGrid,
     WorkloadTable,
     evaluate_batch,
     evaluate_suite,
+    winner_summary,
 )
 from .mapping import BITS_PER_GATE, MappingResult, schedule_stats
 from .sram import (
     TOPOLOGY_LIBRARY,
     EnergyModel,
     Metrics,
+    ModelTable,
     SramTopology,
     evaluate,
     inductor_size_nh,
@@ -80,6 +83,28 @@ class Evaluation:
 
 
 @dataclasses.dataclass
+class VariationResult:
+    """Yield-style summary of a model-variant sweep for one circuit.
+
+    Variant 0 of ``models`` is the nominal model (the `ModelTable`
+    generators' convention); the yield figures measure how robust the
+    nominal pick is across the other variants — the paper's fourth FoM.
+    """
+
+    models: ModelTable
+    grid: VariationGrid              # the (V, T, R) sweep itself
+    winners: list[tuple[tuple[str, ...], SramTopology]]  # per variant
+    winner_share: dict[str, float]   # "topo/recipe" -> fraction of variants won
+    best_yield: float    # fraction of variants where the nominal winner stays best
+    latency_yield: float  # fraction where the nominal winner fits + meets
+    #                       the latency constraint under that variant's clock
+
+    @property
+    def n_variants(self) -> int:
+        return len(self.models)
+
+
+@dataclasses.dataclass
 class ExplorationResult:
     """Output of Algorithm I (+ the full sweep for the benchmarks)."""
 
@@ -94,6 +119,7 @@ class ExplorationResult:
     backend: str = "python"
     grid: ExplorationGrid | None = None  # batched sweep (backend="jax")
     cha: dict[tuple[str, ...], AigStats] | None = None
+    variation: VariationResult | None = None  # model_sweep summary
 
     @property
     def n_evaluations(self) -> int:
@@ -327,6 +353,33 @@ def explore(
     )
 
 
+def _variation_result(
+    vgrid: VariationGrid, max_latency_ns: float | None
+) -> VariationResult:
+    """Per-variant winners + yield summary for one circuit's sweep."""
+    idx = vgrid.best_indices(max_latency_ns)
+    pairs = [vgrid.unravel(int(i)) for i in idx]
+    winners = [(vgrid.recipes[ri], vgrid.topologies[ti]) for ti, ri in pairs]
+    share, best_yield = winner_summary(
+        [f"{topo.name}/{','.join(recipe) or '-'}" for recipe, topo in winners]
+    )
+    # Does the nominal (variant-0) winner stay admissible under each
+    # variant?  Capacity is model-free; latency shifts with each
+    # variant's achievable clock.
+    ti0, ri0 = pairs[0]
+    ok = np.full(len(idx), bool(vgrid.fits[ti0, ri0]))
+    if max_latency_ns is not None:
+        ok &= vgrid.latency_ns[:, ti0, ri0] <= max_latency_ns
+    return VariationResult(
+        models=vgrid.models,
+        grid=vgrid,
+        winners=winners,
+        winner_share=share,
+        best_yield=best_yield,
+        latency_yield=float(np.mean(ok)),
+    )
+
+
 def explore_suite(
     circuits: Mapping[str, Aig],
     sram_list: Sequence[SramTopology] = TOPOLOGY_LIBRARY,
@@ -339,6 +392,7 @@ def explore_suite(
     cha: Mapping[str, Mapping[tuple[str, ...], AigStats]] | None = None,
     cache: "CharacterizationCache | str | os.PathLike | None" = None,
     n_jobs: int | None = None,
+    model_sweep: ModelTable | None = None,
 ) -> dict[str, ExplorationResult]:
     """Algorithm I over a whole benchmark suite in two device-sized steps.
 
@@ -353,12 +407,27 @@ def explore_suite(
     then a view into the stacked result.  ``backend="python"`` falls back
     to the scalar per-circuit loop (still sharing the suite front half).
 
+    ``model_sweep``: a `sram.ModelTable` of energy-model variants
+    (process corners, sensitivity grids, Monte-Carlo samples — variant 0
+    is the nominal model).  The same single compile/device call then
+    covers circuits x variants x topologies x recipes, and every
+    result's ``variation`` field carries the per-variant winners and the
+    yield summary (`VariationResult`).  The headline ``best``/``grid``
+    stay the nominal variant's, so downstream consumers are unchanged.
+    Mutually exclusive with ``model``; requires ``backend="jax"``.
+
     Returns ``{circuit: ExplorationResult}`` in the input's order; each
     result's ``wall_s`` is the suite wall time divided evenly across
     circuits (the work is genuinely shared).
     """
     if backend not in ("python", "jax"):
         raise ValueError(f"unknown backend {backend!r}")
+    if model_sweep is not None:
+        if model is not None:
+            raise ValueError("pass either model or model_sweep, not both")
+        if backend != "jax":
+            raise ValueError("model_sweep requires backend='jax'")
+        model = model_sweep.model(0)  # nominal, for best materialization
     t0 = time.time()
     model = model or EnergyModel()
 
@@ -391,14 +460,20 @@ def explore_suite(
     suite = SuiteTable.from_cha(cha)
     topo_table = TopologyTable.from_topologies(sram_list)
     sg = evaluate_suite(
-        suite, topo_table, model, mode=mode, discipline=discipline,
-        feasible=feas_mask,
+        suite, topo_table, model_sweep if model_sweep is not None else model,
+        mode=mode, discipline=discipline, feasible=feas_mask,
     )
 
     out = {}
     wall = (time.time() - t0) / max(1, len(names))
     for name in names:
-        grid = sg.grid(name)
+        variation = None
+        if model_sweep is not None:
+            vgrid = sg.variation(name)
+            variation = _variation_result(vgrid, max_latency_ns)
+            grid = vgrid.grid(0)  # nominal variant, the headline result
+        else:
+            grid = sg.grid(name)
         ti, ri = grid.unravel(grid.best_index(max_latency_ns))
         recipe, topo = grid.recipes[ri], sram_list[ti]
         best = _materialize(
@@ -416,6 +491,7 @@ def explore_suite(
             backend=backend,
             grid=grid,
             cha=cha[name],
+            variation=variation,
         )
     return out
 

@@ -32,12 +32,31 @@ import json
 
 import numpy as np
 
-from .batch import select_best
+from .batch import select_best, winner_summary
 
 PJ_PER_FLOP = 0.6e-12
 PJ_PER_HBM_BYTE = 10e-12
 PJ_PER_LINK_BYTE = 25e-12
 HBM_GB = 16.0
+
+# The energy-proxy constants as a named variant (J/flop, J/byte) — the
+# mesh analogue of `sram.ModelTable`'s nominal row.
+NOMINAL_CONSTANTS = dict(
+    pj_per_flop=PJ_PER_FLOP,
+    pj_per_hbm_byte=PJ_PER_HBM_BYTE,
+    pj_per_link_byte=PJ_PER_LINK_BYTE,
+)
+
+
+def constant_corners(spread: float = 0.25) -> list[dict]:
+    """Nominal + low/high corners of the energy-proxy constants (vendor
+    figures are order-of-magnitude; the corners bound how sensitive the
+    argmin is to them).  Variant 0 is nominal, like `sram.ModelTable`."""
+
+    def scaled(k: float) -> dict:
+        return {n: v * k for n, v in NOMINAL_CONSTANTS.items()}
+
+    return [dict(NOMINAL_CONSTANTS), scaled(1.0 - spread), scaled(1.0 + spread)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +159,58 @@ def _sweep_workload(
     return evals
 
 
+def variation_summary(
+    evals: list[MeshEvaluation],
+    variants: "list[dict]",
+    max_latency_s: float | None = None,
+) -> dict:
+    """Per-variant winners + yield over an energy-constant sweep — the
+    mesh analogue of `explorer.VariationResult`.  One vectorized
+    ``(V, N)`` energy matrix, then the shared `select_best` per variant;
+    variant 0 is the nominal constants."""
+    comp = np.array(
+        [
+            [
+                e.record["roofline"]["flops"],
+                e.record["roofline"]["hbm_bytes"],
+                e.record["roofline"]["link_bytes"],
+            ]
+            for e in evals
+        ]
+    )  # (N, 3)
+    chips = np.array([e.record["n_chips"] for e in evals], dtype=float)
+    k = np.array(
+        [
+            [v["pj_per_flop"], v["pj_per_hbm_byte"], v["pj_per_link_byte"]]
+            for v in variants
+        ]
+    )  # (V, 3)
+    # Same operation order as `energy_proxy` — chips * (f*kf + h*kh + l*kl)
+    # — so a nominal-constants variant ranks identically to the headline
+    # `best` pick, last-ulp ties included.
+    energy = chips[None, :] * (
+        k[:, 0:1] * comp[None, :, 0]
+        + k[:, 1:2] * comp[None, :, 1]
+        + k[:, 2:3] * comp[None, :, 2]
+    )  # (V, N)
+    fits = np.array([e.fits for e in evals])
+    lat = np.array([e.latency_s for e in evals])
+    idx = [
+        select_best(energy[v], fits, latency=lat, max_latency=max_latency_s)
+        for v in range(len(variants))
+    ]
+    winners = [dict(topo=evals[i].topo, recipe=evals[i].recipe) for i in idx]
+    share, best_yield = winner_summary(
+        [f"{w['topo']}/{w['recipe']}" for w in winners]
+    )
+    return dict(
+        n_variants=len(variants),
+        winners=winners,
+        winner_share=share,
+        best_yield=best_yield,
+    )
+
+
 def _pick_best(
     evals: list[MeshEvaluation], max_latency_s: float | None
 ) -> MeshEvaluation:
@@ -162,18 +233,26 @@ def explore_mesh(
     recipes=DEFAULT_RECIPES,
     out_dir: str = "runs/mesh_explorer",
     max_latency_s: float | None = None,
+    constant_sweep: "list[dict] | None" = None,
 ) -> dict:
     """Algorithm I over the mesh/recipe space.  Returns the full sweep plus
-    the min-energy admissible pick."""
+    the min-energy admissible pick.  ``constant_sweep`` (a list of
+    energy-constant dicts, e.g. `constant_corners()`) additionally
+    reports per-variant winners + yield under a ``"variation"`` key."""
     evals = _sweep_workload(arch, shape, topologies, recipes, out_dir)
     best = _pick_best(evals, max_latency_s)
-    return dict(
+    out = dict(
         arch=arch, shape=shape,
         best=dict(topo=best.topo, recipe=best.recipe,
                   latency_s=best.latency_s, energy_j=best.energy_j,
                   bottleneck=best.bottleneck, hbm_gb=best.hbm_gb),
         sweep=[dataclasses.asdict(e) | {"record": None} for e in evals],
     )
+    if constant_sweep:
+        out["variation"] = variation_summary(
+            evals, list(constant_sweep), max_latency_s
+        )
+    return out
 
 
 def explore_mesh_suite(
@@ -182,6 +261,7 @@ def explore_mesh_suite(
     recipes=DEFAULT_RECIPES,
     out_dir: str = "runs/mesh_explorer",
     max_latency_s: float | None = None,
+    constant_sweep: "list[dict] | None" = None,
 ) -> dict:
     """The suite path for the TPU instantiation: sweep several
     (arch, shape) workloads over one topology x recipe grid — the
@@ -203,6 +283,10 @@ def explore_mesh_suite(
             | {"record": None},
             sweep=[dataclasses.asdict(e) | {"record": None} for e in evals],
         )
+        if constant_sweep:
+            out["workloads"][key]["variation"] = variation_summary(
+                evals, list(constant_sweep), max_latency_s
+            )
         tagged.extend((key, e) for e in evals)
     best_key, best = tagged[
         select_best(
@@ -226,23 +310,40 @@ def main() -> None:
                     help="shape, or comma list; a suite sweep covers the "
                          "full arch x shape product")
     ap.add_argument("--max-latency-s", type=float, default=None)
+    ap.add_argument("--corner-spread", type=float, default=None,
+                    help="sweep the energy-proxy constants over +-x "
+                         "corners and report per-variant winners + yield")
     args = ap.parse_args()
+    sweep = (
+        constant_corners(args.corner_spread)
+        if args.corner_spread is not None else None
+    )
     archs = args.arch.split(",")
     shapes = args.shape.split(",")
     if len(archs) > 1 or len(shapes) > 1:
         workloads = [(a, s) for a in archs for s in shapes]
-        res = explore_mesh_suite(workloads, max_latency_s=args.max_latency_s)
+        res = explore_mesh_suite(workloads, max_latency_s=args.max_latency_s,
+                                 constant_sweep=sweep)
         print(json.dumps(res["best"], indent=1))
         for key, wl in res["workloads"].items():
             b = wl["best"]
             print(f"  {key:28s} -> {b['topo']:16s} {b['recipe']:12s} "
                   f"lat={b['latency_s']:.4f}s E={b['energy_j']:.1f}J")
+            if "variation" in wl:
+                v = wl["variation"]
+                print(f"    constants sweep: best_yield={v['best_yield']:.2f} "
+                      f"share={v['winner_share']}")
         return
-    res = explore_mesh(args.arch, args.shape, max_latency_s=args.max_latency_s)
+    res = explore_mesh(args.arch, args.shape, max_latency_s=args.max_latency_s,
+                       constant_sweep=sweep)
     print(json.dumps(res["best"], indent=1))
     for e in res["sweep"]:
         print(f"  {e['topo']:16s} {e['recipe']:12s} lat={e['latency_s']:.4f}s "
               f"E={e['energy_j']:.1f}J hbm={e['hbm_gb']:.1f}GB {e['bottleneck']}")
+    if "variation" in res:
+        v = res["variation"]
+        print(f"  constants sweep: best_yield={v['best_yield']:.2f} "
+              f"share={v['winner_share']}")
 
 
 if __name__ == "__main__":

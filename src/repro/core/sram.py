@@ -45,6 +45,8 @@ import dataclasses
 import math
 from typing import Sequence
 
+import numpy as np
+
 # ---------------------------------------------------------------------------
 # Topology library — 12 entries: {4, 8, 16, 32} KB x {1, 3, 6} macros
 # ---------------------------------------------------------------------------
@@ -135,8 +137,9 @@ class SramTopology:
         return max(1, self.macro_kb // 2)
 
     def area_mm2(self, model: "EnergyModel") -> float:
-        cell = self.total_bits * model.bitcell_um2 * 1e-6  # mm^2
-        return cell * (1.0 + model.periphery_overhead)
+        return area_mm2_arrays(
+            self.total_bits, model.bitcell_um2, model.periphery_overhead
+        )
 
 
 TOPOLOGY_LIBRARY: tuple[SramTopology, ...] = tuple(
@@ -218,6 +221,224 @@ class EnergyModel:
     def resonant_saving_fj(self) -> float:
         """Energy recycled per written bit vs a conventional driver."""
         return self.writeback_fj_nonresonant * self.resonance_recycle_eta
+
+
+def area_mm2_arrays(total_bits, bitcell_um2, periphery_overhead):
+    """Area model, array-agnostic (scalars, (T,) arrays, or (V, T) grids).
+
+    `SramTopology.area_mm2` and the batched `TopologyTable.area_mm2` both
+    call this, so the scalar and vectorized paths are the same float ops.
+    """
+    cell = total_bits * bitcell_um2 * 1e-6  # mm^2
+    return cell * (1.0 + periphery_overhead)
+
+
+# ---------------------------------------------------------------------------
+# Model variation: stacked EnergyModel variants (the yield/variation axis)
+# ---------------------------------------------------------------------------
+
+# EnergyModel fields whose variation shifts the reported figures:
+# everything the evaluate kernels, the area model, and the Table II
+# arithmetic read.  The clock is included: corner silicon runs at a
+# different achievable f_clk.  (writeback_fj_nonresonant /
+# resonance_recycle_eta feed no metric path yet, so sweeping them would
+# only emit inert variants that skew the yield fractions.)
+SWEEPABLE_FIELDS = (
+    "f_clk_hz",
+    "e_op_fj",
+    "e_op_marginal_fj",
+    "p_ctrl_mw",
+    "e_macro_cycle_fj",
+    "e_col_cycle_fj",
+    "alpha_mw_per_level",
+    "bitcell_um2",
+    "periphery_overhead",
+    "pipeline_utilization",
+)
+
+# Fields scaled together by the process-corner generator: the switched
+# (CV^2-like) energy/power constants.  Geometry/utilization constants are
+# corner-independent.
+_CORNER_ENERGY_FIELDS = (
+    "e_op_fj",
+    "e_op_marginal_fj",
+    "writeback_fj_nonresonant",
+    "p_ctrl_mw",
+    "e_macro_cycle_fj",
+    "e_col_cycle_fj",
+    "alpha_mw_per_level",
+)
+
+
+def _scale_field(model: "EnergyModel", field: str, factor: float):
+    v = getattr(model, field)
+    if isinstance(v, tuple):
+        return tuple(x * factor for x in v)
+    return v * factor
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ModelTable:
+    """A stack of `EnergyModel` variants, one row per variant — the
+    dynamic model axis of the batched engine.
+
+    Every `EnergyModel` float field becomes a float64 array with a
+    leading variant axis: ``(V,)`` for scalars, ``(V, 3)`` for the per-op
+    tuples.  The batched kernels (`batch.evaluate_batch` /
+    `batch.evaluate_suite`) take these arrays as *traced* operands and
+    vmap over the variant axis, so one jit compilation sweeps every
+    variant — no per-model recompile, which is what makes corner /
+    sensitivity / Monte-Carlo studies (the paper's yield FoM) cheap.
+
+    Convention: **row 0 is the nominal model** — the generators below all
+    put it first, and the yield summaries in `explorer` measure variants
+    against it.
+    """
+
+    names: tuple[str, ...]
+    f_clk_hz: np.ndarray                  # (V,)
+    e_op_fj: np.ndarray                   # (V, 3)
+    e_op_marginal_fj: np.ndarray          # (V, 3)
+    writeback_fj_nonresonant: np.ndarray  # (V,)
+    resonance_recycle_eta: np.ndarray     # (V,)
+    p_ctrl_mw: np.ndarray                 # (V,)
+    e_macro_cycle_fj: np.ndarray          # (V,)
+    e_col_cycle_fj: np.ndarray            # (V,)
+    alpha_mw_per_level: np.ndarray        # (V,)
+    bitcell_um2: np.ndarray               # (V,)
+    periphery_overhead: np.ndarray        # (V,)
+    pipeline_utilization: np.ndarray      # (V,)
+
+    def __post_init__(self):
+        v = len(self.names)
+        if v == 0:
+            raise ValueError("empty ModelTable")
+        for f in dataclasses.fields(EnergyModel):
+            arr = getattr(self, f.name)
+            if arr.shape[0] != v:
+                raise ValueError(
+                    f"field {f.name} has {arr.shape[0]} rows, expected {v}"
+                )
+
+    @classmethod
+    def from_models(
+        cls,
+        models: "Sequence[EnergyModel]",
+        names: Sequence[str] | None = None,
+    ) -> "ModelTable":
+        """Stack explicit `EnergyModel` variants (nominal first)."""
+        models = list(models)
+        if not models:
+            raise ValueError("empty model list")
+        if names is None:
+            names = tuple(f"v{i}" for i in range(len(models)))
+        arrays = {
+            f.name: np.asarray(
+                [getattr(m, f.name) for m in models], dtype=np.float64
+            )
+            for f in dataclasses.fields(EnergyModel)
+        }
+        return cls(names=tuple(names), **arrays)
+
+    @classmethod
+    def corners(
+        cls, base: "EnergyModel | None" = None, spread: float = 0.10
+    ) -> "ModelTable":
+        """TT/FF/SS-style process corners: the switched energy/power
+        constants scale by ``1 -+ spread`` while the achievable clock
+        scales the opposite way (fast silicon: less energy per op, higher
+        f_clk).  Row 0 is the typical (nominal) model."""
+        base = base or EnergyModel()
+
+        def corner(k_energy: float, k_clk: float) -> EnergyModel:
+            kw = {f: _scale_field(base, f, k_energy)
+                  for f in _CORNER_ENERGY_FIELDS}
+            kw["f_clk_hz"] = base.f_clk_hz * k_clk
+            return dataclasses.replace(base, **kw)
+
+        return cls.from_models(
+            [base, corner(1.0 - spread, 1.0 + spread),
+             corner(1.0 + spread, 1.0 - spread)],
+            names=("tt", "ff", "ss"),
+        )
+
+    @classmethod
+    def sensitivity(
+        cls,
+        base: "EnergyModel | None" = None,
+        fields: Sequence[str] | None = None,
+        rel: float = 0.05,
+    ) -> "ModelTable":
+        """One-at-a-time ±``rel`` perturbation grid: the nominal model
+        plus, for each swept field, a +rel and a -rel variant."""
+        base = base or EnergyModel()
+        fields = tuple(fields) if fields is not None else SWEEPABLE_FIELDS
+        unknown = [f for f in fields if f not in SWEEPABLE_FIELDS]
+        if unknown:
+            raise ValueError(f"not sweepable: {unknown}")
+        models, names = [base], ["nominal"]
+        for f in fields:
+            for sign in (+1.0, -1.0):
+                factor = 1.0 + sign * rel
+                models.append(
+                    dataclasses.replace(base, **{f: _scale_field(base, f, factor)})
+                )
+                names.append(f"{f}{'+' if sign > 0 else '-'}{rel:g}")
+        return cls.from_models(models, names=names)
+
+    @classmethod
+    def monte_carlo(
+        cls,
+        base: "EnergyModel | None" = None,
+        n: int = 16,
+        sigma: float = 0.05,
+        seed: int = 0,
+        fields: Sequence[str] | None = None,
+    ) -> "ModelTable":
+        """``n`` seeded Monte-Carlo samples (row 0 is the nominal model,
+        rows 1..n-1 scale each swept field by an independent
+        ``N(1, sigma)`` factor, floored at 0.05 to keep the model in its
+        physical regime)."""
+        if n < 1:
+            raise ValueError("n must be >= 1")
+        base = base or EnergyModel()
+        fields = tuple(fields) if fields is not None else SWEEPABLE_FIELDS
+        unknown = [f for f in fields if f not in SWEEPABLE_FIELDS]
+        if unknown:
+            raise ValueError(f"not sweepable: {unknown}")
+        rng = np.random.default_rng(seed)
+        models, names = [base], ["nominal"]
+        for i in range(1, n):
+            kw = {}
+            for f in fields:
+                v = getattr(base, f)
+                if isinstance(v, tuple):
+                    factors = np.maximum(rng.normal(1.0, sigma, len(v)), 0.05)
+                    kw[f] = tuple(float(x * k) for x, k in zip(v, factors))
+                else:
+                    kw[f] = v * float(
+                        max(rng.normal(1.0, sigma), 0.05)
+                    )
+            models.append(dataclasses.replace(base, **kw))
+            names.append(f"mc{i}")
+        return cls.from_models(models, names=names)
+
+    def model(self, i: int) -> "EnergyModel":
+        """Row ``i`` re-materialized as a plain `EnergyModel` (exact:
+        float64 -> python float round-trips bit-for-bit)."""
+        kw = {}
+        for f in dataclasses.fields(EnergyModel):
+            v = getattr(self, f.name)[i]
+            kw[f.name] = (
+                tuple(float(x) for x in v) if np.ndim(v) else float(v)
+            )
+        return EnergyModel(**kw)
+
+    def models(self) -> "list[EnergyModel]":
+        return [self.model(i) for i in range(len(self))]
+
+    def __len__(self) -> int:
+        return len(self.names)
 
 
 @dataclasses.dataclass

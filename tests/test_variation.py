@@ -1,0 +1,388 @@
+"""Parity + no-recompile tests for the dynamic energy-model axis.
+
+The contract under test (the yield/variation engine of core/batch.py):
+
+  * a 1-variant `ModelTable` sweep is **bit-identical** to the
+    static-`EnergyModel` path, across grids, accounting modes, and
+    scheduling disciplines (the model constants moved from jit statics
+    to traced operands without changing a single float op);
+  * an N-variant sweep matches N serial static-model runs on every
+    (circuit, recipe, topology) cell, including the per-variant
+    `select_best` winners;
+  * the whole sweep costs exactly ONE jit trace, and changing only the
+    model floats never retriggers tracing (`batch.trace_counts`).
+
+The property suites run under hypothesis when it is installed
+(``pip install -e .[test]``); deterministic seeded versions of the same
+assertions always run, so the parity contract is enforced either way.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import circuits as C
+from repro.core.aig import AigStats
+from repro.core.batch import (
+    SuiteTable,
+    TopologyTable,
+    WorkloadTable,
+    evaluate_batch,
+    evaluate_suite,
+    table2_batch,
+    trace_counts,
+)
+from repro.core.explorer import characterize_recipes, explore_suite
+from repro.core.sram import (
+    SWEEPABLE_FIELDS,
+    TOPOLOGY_LIBRARY,
+    EnergyModel,
+    ModelTable,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs the test extra
+    HAVE_HYPOTHESIS = False
+
+METRIC_KEYS = (
+    "latency_ns", "energy_nj", "power_mw", "throughput_gops", "tops_per_watt"
+)
+
+
+def stats_from_levels(levels):
+    ops = [dict(nand=a, nor=b, inv=c) for a, b, c in levels]
+    return AigStats(
+        n_pis=8, n_pos=4, n_ands=0, n_levels=len(ops), ops_per_level=ops,
+        nand_count=sum(l[0] for l in levels),
+        nor_count=sum(l[1] for l in levels),
+        inv_count=sum(l[2] for l in levels),
+    )
+
+
+def random_workload(rng, n_recipes=5, max_levels=9, max_ops=2000):
+    items = []
+    for i in range(n_recipes):
+        n = int(rng.integers(1, max_levels + 1))
+        levels = [
+            tuple(int(x) for x in rng.integers(0, max_ops, size=3))
+            for _ in range(n)
+        ]
+        items.append(((str(i),), stats_from_levels(levels)))
+    return WorkloadTable.from_stats(items)
+
+
+def scale_model(base: EnergyModel, k: float) -> EnergyModel:
+    """Every sweepable field scaled by ``k`` — a maximally 'different'
+    model that still exercises all constants."""
+    kw = {}
+    for f in SWEEPABLE_FIELDS:
+        v = getattr(base, f)
+        kw[f] = tuple(x * k for x in v) if isinstance(v, tuple) else v * k
+    return dataclasses.replace(base, **kw)
+
+
+def assert_one_variant_bit_identical(work, topos, model, mode, discipline):
+    static = evaluate_batch(work, topos, model, mode=mode,
+                            discipline=discipline)
+    sweep = evaluate_batch(
+        work, topos, ModelTable.from_models([model]), mode=mode,
+        discipline=discipline,
+    )
+    assert sweep.n_variants == 1
+    np.testing.assert_array_equal(static.cycles, sweep.cycles)
+    np.testing.assert_array_equal(
+        static.active_macro_cycles, sweep.active_macro_cycles
+    )
+    np.testing.assert_array_equal(static.fits, sweep.fits)
+    for k in METRIC_KEYS:
+        a, b = getattr(static, k), getattr(sweep, k)[0]
+        assert np.array_equal(a, b), f"{k} not bit-identical"
+    assert np.array_equal(static.area_mm2, sweep.area_mm2[0])
+    # identical winner, including tie-breaking
+    assert static.best_index() == int(sweep.best_indices()[0])
+    # and the variant-0 slice is a full ExplorationGrid equal to static
+    g0 = sweep.grid(0)
+    assert np.array_equal(static.energy_nj, g0.energy_nj)
+    assert g0.model == model
+
+
+# ---------------------------------------------------------------------------
+# 1-variant sweep == static path, bit for bit (deterministic seeds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["physical", "paper"])
+@pytest.mark.parametrize("discipline", ["list", "levels"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_one_variant_bit_identical(mode, discipline, seed):
+    rng = np.random.default_rng(seed)
+    work = random_workload(rng)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    model = scale_model(EnergyModel(), float(rng.uniform(0.3, 3.0)))
+    assert_one_variant_bit_identical(work, topos, model, mode, discipline)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        workloads=st.lists(
+            st.lists(
+                st.tuples(
+                    st.integers(0, 1500),
+                    st.integers(0, 1500),
+                    st.integers(0, 400),
+                ),
+                min_size=1,
+                max_size=8,
+            ),
+            min_size=1,
+            max_size=4,
+        ),
+        scale=st.floats(0.25, 4.0),
+        mode=st.sampled_from(["physical", "paper"]),
+        discipline=st.sampled_from(["list", "levels"]),
+    )
+    def test_property_one_variant_bit_identical(
+        workloads, scale, mode, discipline
+    ):
+        work = WorkloadTable.from_stats(
+            [((str(i),), stats_from_levels(lv))
+             for i, lv in enumerate(workloads)]
+        )
+        topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+        model = scale_model(EnergyModel(), scale)
+        assert_one_variant_bit_identical(work, topos, model, mode, discipline)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 9),
+        sigma=st.floats(0.01, 0.5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_modeltable_roundtrip(n, sigma, seed):
+        table = ModelTable.monte_carlo(n=n, sigma=sigma, seed=seed)
+        assert len(table) == n
+        # float64 -> EnergyModel -> float64 round-trips exactly
+        again = ModelTable.from_models(table.models(), names=table.names)
+        for f in dataclasses.fields(EnergyModel):
+            np.testing.assert_array_equal(
+                getattr(table, f.name), getattr(again, f.name)
+            )
+        # seeded: same seed reproduces, row 0 is nominal
+        assert table.model(0) == EnergyModel()
+        table2 = ModelTable.monte_carlo(n=n, sigma=sigma, seed=seed)
+        np.testing.assert_array_equal(table.p_ctrl_mw, table2.p_ctrl_mw)
+
+else:  # keep the property suite visible as skips when hypothesis is absent
+
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -e .[test])")
+    def test_property_one_variant_bit_identical():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -e .[test])")
+    def test_property_modeltable_roundtrip():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# N-variant sweep == N serial static-model runs (65 x 12 slice)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bar_suite():
+    suite = C.benchmark_suite(scale="tiny", only=("bar",))
+    cha = {"bar": characterize_recipes(suite["bar"])}  # all 64 recipes + ()
+    return suite, cha
+
+
+def test_variant_winners_match_serial_explore_suite(bar_suite):
+    suite, cha = bar_suite
+    table = ModelTable.monte_carlo(n=4, sigma=0.15, seed=7)
+    res = explore_suite(suite, cha=cha, model_sweep=table)["bar"]
+    var = res.variation
+    assert var is not None and var.n_variants == 4
+    assert res.n_evaluations == 65 * 12  # the acceptance slice
+    assert sum(var.winner_share.values()) == pytest.approx(1.0)
+    for v in range(4):
+        serial = explore_suite(suite, cha=cha, model=table.model(v))["bar"]
+        # identical winner implementation...
+        assert (serial.best.recipe, serial.best.topo) == var.winners[v]
+        # ...and identical energies on every (recipe, topology) cell
+        np.testing.assert_array_equal(
+            var.grid.energy_nj[v], serial.grid.energy_nj
+        )
+        np.testing.assert_array_equal(
+            var.grid.latency_ns[v], serial.grid.latency_ns
+        )
+    # the headline best/grid are the nominal variant's
+    nominal = explore_suite(suite, cha=cha, model=table.model(0))["bar"]
+    assert res.best.metrics.energy_nj == nominal.best.metrics.energy_nj
+    assert (res.best.recipe, res.best.topo) == (
+        nominal.best.recipe, nominal.best.topo
+    )
+
+
+def test_degenerate_sweep_yield_is_one(bar_suite):
+    suite, cha = bar_suite
+    em = EnergyModel()
+    table = ModelTable.from_models([em] * 5)
+    res = explore_suite(
+        suite, cha=cha, recipes=[("Ba",), ("Rw",)], model_sweep=table
+    )["bar"]
+    var = res.variation
+    assert var.best_yield == 1.0
+    assert var.latency_yield == 1.0
+    assert len(set(var.winners)) == 1
+    assert var.winner_share == {
+        f"{res.best.topo.name}/{','.join(res.best.recipe) or '-'}": 1.0
+    }
+
+
+def test_model_sweep_argument_validation(bar_suite):
+    suite, cha = bar_suite
+    table = ModelTable.corners()
+    with pytest.raises(ValueError, match="either model or model_sweep"):
+        explore_suite(suite, cha=cha, model=EnergyModel(), model_sweep=table)
+    with pytest.raises(ValueError, match="backend"):
+        explore_suite(suite, cha=cha, model_sweep=table, backend="python")
+
+
+# ---------------------------------------------------------------------------
+# Compile-count guard: one trace per sweep, zero per float change
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_traces_exactly_once_and_float_changes_do_not_retrace():
+    # Unique grid shape (R=11 recipes, C=3 circuits) so the first call is
+    # guaranteed to be a fresh trace even when other tests ran first.
+    rng = np.random.default_rng(123)
+    work = random_workload(rng, n_recipes=11)
+    suite = SuiteTable.from_workloads(
+        {"a": work, "b": work, "c": work}
+    )
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    table_a = ModelTable.monte_carlo(n=8, sigma=0.1, seed=0)
+
+    before = trace_counts().get("evaluate_suite", 0)
+    svg_a = evaluate_suite(suite, topos, table_a)
+    assert trace_counts().get("evaluate_suite", 0) == before + 1
+
+    # Same shapes, different model floats: served from the jit cache.
+    table_b = ModelTable.monte_carlo(n=8, sigma=0.4, seed=99)
+    svg_b = evaluate_suite(suite, topos, table_b)
+    assert trace_counts().get("evaluate_suite", 0) == before + 1
+    # ...and the floats really flowed through (not a stale constant).
+    assert not np.array_equal(svg_a.energy_nj, svg_b.energy_nj)
+    np.testing.assert_array_equal(svg_a.cycles, svg_b.cycles)
+
+    # A new variant count is a new shape: exactly one more trace.
+    evaluate_suite(suite, topos, ModelTable.monte_carlo(n=16, seed=1))
+    assert trace_counts().get("evaluate_suite", 0) == before + 2
+
+
+def test_serial_static_models_share_one_compile():
+    rng = np.random.default_rng(321)
+    work = random_workload(rng, n_recipes=13)  # unique shape again
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    table = ModelTable.monte_carlo(n=6, sigma=0.2, seed=5)
+
+    before = trace_counts().get("evaluate_grid", 0)
+    grids = [
+        evaluate_batch(work, topos, table.model(v)) for v in range(6)
+    ]
+    # the old engine paid one compile per EnergyModel; now the first call
+    # traces and the other five hit the cache
+    assert trace_counts().get("evaluate_grid", 0) == before + 1
+    # parity of the serial runs against the one-call sweep
+    sweep = evaluate_batch(work, topos, table)
+    assert trace_counts().get("evaluate_grid", 0) == before + 2  # V=6 shape
+    for v, g in enumerate(grids):
+        np.testing.assert_array_equal(sweep.energy_nj[v], g.energy_nj)
+        assert int(sweep.best_indices()[v]) == g.best_index()
+
+
+# ---------------------------------------------------------------------------
+# ModelTable generators
+# ---------------------------------------------------------------------------
+
+
+def test_corners_generator():
+    table = ModelTable.corners(spread=0.1)
+    assert table.names == ("tt", "ff", "ss")
+    base = EnergyModel()
+    assert table.model(0) == base
+    ff, ss = table.model(1), table.model(2)
+    # fast silicon: cheaper ops, faster clock; slow: the reverse
+    assert ff.e_op_fj[0] < base.e_op_fj[0] < ss.e_op_fj[0]
+    assert ff.f_clk_hz > base.f_clk_hz > ss.f_clk_hz
+    # geometry is corner-independent
+    assert ff.bitcell_um2 == base.bitcell_um2 == ss.bitcell_um2
+
+
+def test_sensitivity_generator():
+    fields = ("p_ctrl_mw", "e_op_marginal_fj")
+    table = ModelTable.sensitivity(fields=fields, rel=0.05)
+    assert len(table) == 1 + 2 * len(fields)
+    assert table.model(0) == EnergyModel()
+    plus = table.model(1)
+    assert plus.p_ctrl_mw == pytest.approx(EnergyModel().p_ctrl_mw * 1.05)
+    # one-at-a-time: the other field stays nominal
+    assert plus.e_op_marginal_fj == EnergyModel().e_op_marginal_fj
+    with pytest.raises(ValueError, match="not sweepable"):
+        ModelTable.sensitivity(fields=("nonsense",))
+
+
+def test_monte_carlo_generator_errors_and_fields():
+    with pytest.raises(ValueError):
+        ModelTable.monte_carlo(n=0)
+    with pytest.raises(ValueError):
+        ModelTable.from_models([])
+    table = ModelTable.monte_carlo(
+        n=4, sigma=0.2, seed=11, fields=("f_clk_hz",)
+    )
+    base = EnergyModel()
+    for v in range(1, 4):
+        m = table.model(v)
+        assert m.f_clk_hz != base.f_clk_hz
+        assert m.p_ctrl_mw == base.p_ctrl_mw  # unswept fields untouched
+
+
+# ---------------------------------------------------------------------------
+# Vectorized area + Table II over the model axis
+# ---------------------------------------------------------------------------
+
+
+def test_topology_table_area_vectorized_matches_scalar():
+    tt = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    em = EnergyModel()
+    ref = np.array([t.area_mm2(em) for t in TOPOLOGY_LIBRARY])
+    np.testing.assert_array_equal(tt.area_mm2(em), ref)
+
+    table = ModelTable.sensitivity(
+        fields=("bitcell_um2", "periphery_overhead"), rel=0.1
+    )
+    va = tt.area_mm2(table)
+    assert va.shape == (len(table), len(TOPOLOGY_LIBRARY))
+    for v in range(len(table)):
+        np.testing.assert_array_equal(
+            va[v],
+            np.array([t.area_mm2(table.model(v)) for t in TOPOLOGY_LIBRARY]),
+        )
+
+
+def test_table2_batch_over_model_table():
+    tt = TopologyTable.from_topologies(TOPOLOGY_LIBRARY[:5])
+    table = ModelTable.monte_carlo(n=3, sigma=0.1, seed=2)
+    out = table2_batch(tt, table)
+    for v in range(3):
+        ref = table2_batch(tt, table.model(v))
+        for k, arr in ref.items():
+            assert out[k].shape == (3, 5)
+            np.testing.assert_array_equal(out[k][v], arr)

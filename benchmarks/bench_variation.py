@@ -117,6 +117,13 @@ def run_model_sweep(
       flattering to it — the old engine also paid a fresh jit compile
       per model, which the serial loop here no longer does).
 
+    Also times the *selection* stage both ways (batched
+    `SuiteVariationGrid.best_indices` vs the per-(circuit, variant)
+    `select_best` loop it replaced, winner agreement asserted on every
+    cell) and pushes one correlated `(V, T)`
+    `ModelTable.bitcell_sigma_per_macro` sweep through the same kernels
+    (exactly one extra compile for the new params shape).
+
     Merges the result into ``out_json`` under a ``"variation"`` key.
     """
     from repro.core import circuits as C
@@ -124,6 +131,7 @@ def run_model_sweep(
         SuiteTable,
         TopologyTable,
         evaluate_suite,
+        select_best,
         trace_counts,
     )
     from repro.core.explorer import explore
@@ -203,6 +211,43 @@ def run_model_sweep(
                 py_checked += 1
             all_agree &= agree
 
+    # Selection stage: the batched (C, V) masked-argmin pass
+    # (`SuiteVariationGrid.best_indices`) vs the per-(circuit, variant)
+    # python loop over `select_best` it replaced — the last serial
+    # O(C*V) segment of the sweep.
+    def loop_selection(grid) -> np.ndarray:
+        out = np.empty((len(grid.circuits), n_variants), dtype=np.int64)
+        for c, name in enumerate(grid.circuits):
+            vgrid = grid.variation(name)
+            feas = np.broadcast_to(vgrid.feasible[:, None], vgrid.fits.shape)
+            for v in range(n_variants):
+                out[c, v] = select_best(
+                    vgrid.energy_nj[v], vgrid.fits,
+                    latency=vgrid.latency_ns[v], feasible=feas,
+                )
+        return out
+
+    selection_agree = bool(
+        np.array_equal(svg.best_indices(), loop_selection(svg))
+    )
+    t_sel_batched = timeit(svg.best_indices, n_warmup=0, n_iter=n_iter)
+    t_sel_loop = timeit(loop_selection, svg, n_warmup=0, n_iter=n_iter)
+    sel_speedup = t_sel_loop / t_sel_batched if t_sel_batched > 0 else float("inf")
+
+    # Correlated (V, T) sweep: per-macro-geometry bitcell sigma.  The
+    # (V, T)-shaped params are a new traced shape — exactly one more
+    # compile — and the batched winners must agree with the per-cell
+    # loop here too.
+    corr_table = ModelTable.bitcell_sigma_per_macro(
+        TOPOLOGY_LIBRARY, n=n_variants, sigma=sigma, seed=0
+    )
+    before_corr = trace_counts().get("evaluate_suite", 0)
+    svg_corr = evaluate_suite(suite_table, topos, corr_table)
+    corr_compiles = trace_counts().get("evaluate_suite", 0) - before_corr
+    corr_agree = bool(
+        np.array_equal(svg_corr.best_indices(), loop_selection(svg_corr))
+    )
+
     record = dict(
         scale=scale,
         n_circuits=len(suite),
@@ -218,6 +263,12 @@ def run_model_sweep(
         recompiles_on_float_change=recompiles_on_float_change,
         all_agree=bool(all_agree),
         python_winners_checked=py_checked,
+        selection_batched_us=round(t_sel_batched, 1),
+        selection_loop_us=round(t_sel_loop, 1),
+        selection_speedup=round(sel_speedup, 2),
+        selection_agree=selection_agree,
+        correlated_compiles=corr_compiles,
+        correlated_agree=bool(corr_agree),
     )
 
     merge_json(out_json, {merge_key: record})
@@ -226,7 +277,9 @@ def run_model_sweep(
         f"variation/model_sweep/{merge_key}", t_sweep,
         f"serial_us={t_serial:.0f};speedup={speedup:.1f}x;"
         f"variants={n_variants};impls={svg.size};compiles={compiles};"
-        f"agree={all_agree};json={out_json}",
+        f"agree={all_agree};selection_speedup={sel_speedup:.1f}x;"
+        f"selection_agree={selection_agree};"
+        f"correlated_compiles={corr_compiles};json={out_json}",
     )
     return record
 

@@ -19,7 +19,7 @@ import argparse
 
 from repro.core import circuits as C
 from repro.core.explorer import best_worst, explore_suite
-from repro.core.sram import EnergyModel, ModelTable
+from repro.core.sram import TOPOLOGY_LIBRARY, EnergyModel, ModelTable
 
 
 def main():
@@ -35,13 +35,16 @@ def main():
                     help="persistent characterization cache directory")
     ap.add_argument("--jobs", type=int, default=None,
                     help="characterization workers (default: min(4, cpus))")
-    ap.add_argument("--model-sweep", choices=["corners", "sensitivity", "mc"],
+    ap.add_argument("--model-sweep",
+                    choices=["corners", "sensitivity", "mc", "correlated"],
                     default=None,
                     help="sweep EnergyModel variants (process corners, "
-                         "one-at-a-time sensitivity, or Monte-Carlo) through "
+                         "one-at-a-time sensitivity, Monte-Carlo, or "
+                         "correlated per-macro-geometry Monte-Carlo) through "
                          "the same compile and report a yield summary")
     ap.add_argument("--model-variants", type=int, default=16,
-                    help="Monte-Carlo sample count (--model-sweep mc)")
+                    help="Monte-Carlo sample count "
+                         "(--model-sweep mc/correlated)")
     ap.add_argument("--model-sigma", type=float, default=0.05,
                     help="relative sigma/spread for the model sweep")
     args = ap.parse_args()
@@ -54,6 +57,13 @@ def main():
     elif args.model_sweep == "mc":
         model_sweep = ModelTable.monte_carlo(
             EnergyModel(), n=args.model_variants, sigma=args.model_sigma, seed=0
+        )
+    elif args.model_sweep == "correlated":
+        # topology-dependent (V, T) variation keyed on the library's
+        # macro geometries — must match the swept topology list
+        model_sweep = ModelTable.bitcell_sigma_per_macro(
+            TOPOLOGY_LIBRARY, n=args.model_variants,
+            sigma=args.model_sigma, seed=0,
         )
 
     names = list(C._GENERATORS) if (args.all or args.circuit == "all") else [args.circuit]

@@ -67,10 +67,25 @@ assert v["compiles"] == 1, \
     f"an N-variant sweep must cost exactly one jit trace, got {v['compiles']}"
 assert v["recompiles_on_float_change"] == 0, \
     "changing only model floats retriggered tracing"
+assert v["selection_agree"], \
+    "batched selection disagrees with the per-(circuit, variant) " \
+    "select_best loop"
+assert v["selection_speedup"] > 1.0, \
+    f"batched selection ({v['selection_batched_us']}us) must beat the " \
+    f"per-variant loop ({v['selection_loop_us']}us)"
+assert v["correlated_agree"], \
+    "correlated (V, T) sweep: batched winners disagree with the loop"
+assert v["correlated_compiles"] == 1, \
+    f"a correlated (V, T) sweep must cost exactly one jit trace, " \
+    f"got {v['correlated_compiles']}"
 print(f"model sweep: {v['n_variants']} variants x "
       f"{v['implementations'] // v['n_variants']} designs in "
       f"{v['sweep_us']:.0f}us, serial {v['serial_us']:.0f}us "
-      f"-> {v['speedup']}x, compiles={v['compiles']}")
+      f"-> {v['speedup']}x, compiles={v['compiles']}; "
+      f"selection {v['selection_loop_us']:.0f}us -> "
+      f"{v['selection_batched_us']:.0f}us "
+      f"({v['selection_speedup']}x); correlated sweep "
+      f"compiles={v['correlated_compiles']}")
 EOF
 fi
 echo "CI OK"

@@ -17,9 +17,14 @@ ChaAIG -> Evaluate -> FilterEnergy sweep is one jitted `jax.numpy` pass:
     accounting modes) over the grid, yielding an ``ExplorationGrid`` —
     or, given a `sram.ModelTable`, a ``VariationGrid`` with a leading
     model-variant axis;
-  * ``select_best`` / ``select_best_worst`` — the shared capacity /
-    latency admissibility filter + energy argmin/argmax used by
-    `explorer`, `mesh_explorer`, and the benchmarks.
+  * ``select_best`` / ``select_best_batch`` / ``select_best_worst`` —
+    the shared capacity / latency admissibility filter + energy
+    argmin/argmax used by `explorer`, `mesh_explorer`, and the
+    benchmarks.  ``select_best_batch`` is the batched filter: winners
+    for every (circuit, variant) cell of a variation sweep in one masked
+    three-tier argmin pass (non-finite energies are inadmissible in
+    every tier), so the selection stage scales with the evaluate stage
+    instead of looping per variant in python.
 
 Parity contract: every cycle/flag quantity is exact integer arithmetic,
 and the energy expressions are the *same functions* the scalar path uses
@@ -107,15 +112,21 @@ class ModelParams(NamedTuple):
     arrays with a leading variant axis — the *traced* (dynamic) model
     operand.  A NamedTuple so it is a jax pytree and the `sram` mode
     helpers' ``model.<field>`` attribute reads work unchanged inside the
-    kernel."""
+    kernel.
 
-    f_clk_hz: np.ndarray            # (V,)
+    Scalar fields are ``(V,)`` for uniform sweeps or ``(V, T)`` for
+    correlated (topology-dependent) variation: after the variant vmap
+    each leaf is ``()`` or ``(T,)``, and the grid arithmetic (all
+    ``(R, T)``-shaped) broadcasts either along its trailing topology
+    axis — the same float ops, no new compile path."""
+
+    f_clk_hz: np.ndarray            # (V,) or (V, T)
     e_op_marginal_fj: np.ndarray    # (V, 3)
-    p_ctrl_mw: np.ndarray           # (V,)
-    e_macro_cycle_fj: np.ndarray    # (V,)
-    e_col_cycle_fj: np.ndarray      # (V,)
-    alpha_mw_per_level: np.ndarray  # (V,)
-    pipeline_utilization: np.ndarray  # (V,)
+    p_ctrl_mw: np.ndarray           # (V,) or (V, T)
+    e_macro_cycle_fj: np.ndarray    # (V,) or (V, T)
+    e_col_cycle_fj: np.ndarray      # (V,) or (V, T)
+    alpha_mw_per_level: np.ndarray  # (V,) or (V, T)
+    pipeline_utilization: np.ndarray  # (V,) or (V, T)
 
 
 def _model_params(table: ModelTable) -> ModelParams:
@@ -132,7 +143,40 @@ def _as_table(model: "EnergyModel | ModelTable | None") -> tuple[ModelTable, boo
     whether the caller asked for a variant sweep (vs a single model)."""
     if isinstance(model, ModelTable):
         return model, True
-    return ModelTable.from_models([model or EnergyModel()]), False
+    if model is None:
+        model = EnergyModel()
+    return ModelTable.from_models([model]), False
+
+
+def _check_topo_axis(table: ModelTable, topos: "TopologyTable") -> None:
+    """A correlated table's per-topology axis must match the topology
+    table it is swept against (a `(V, 1)` axis broadcasts uniformly) —
+    by width, and by *identity* when the table records which topologies
+    its columns were generated for: a same-length but different/reordered
+    topology list would silently land each column's variation on the
+    wrong macro geometry."""
+    if len(table) == 0:
+        raise ValueError("empty ModelTable")
+    t = table.n_topologies
+    if t is not None and t != len(topos):
+        raise ValueError(
+            f"ModelTable per-topology axis has width {t}, but the sweep "
+            f"covers {len(topos)} topologies"
+        )
+    if table.topology_names is not None:
+        actual = tuple(tp.name for tp in topos.topologies)
+        if table.topology_names != actual:
+            raise ValueError(
+                "ModelTable's per-topology columns were generated for "
+                f"topologies {table.topology_names}, but the sweep covers "
+                f"{actual} — regenerate the table for this topology list"
+            )
+
+
+def _per_topo(arr: np.ndarray) -> np.ndarray:
+    """A scalar `ModelTable` field as a (V, 1)-or-(V, T) column view, so
+    it broadcasts against (T,) topology arrays either way."""
+    return arr[:, None] if arr.ndim == 1 else arr
 
 
 # ---------------------------------------------------------------------------
@@ -186,12 +230,14 @@ class TopologyTable:
     def area_mm2(self, model: "EnergyModel | ModelTable") -> np.ndarray:
         """Vectorized `SramTopology.area_mm2` — the same
         `sram.area_mm2_arrays` expression over the stacked ``total_bits``:
-        ``(T,)`` for one `EnergyModel`, ``(V, T)`` for a `ModelTable`."""
+        ``(T,)`` for one `EnergyModel`, ``(V, T)`` for a `ModelTable`
+        (whose area fields may themselves be per-topology ``(V, T)``)."""
         if isinstance(model, ModelTable):
+            _check_topo_axis(model, self)
             return area_mm2_arrays(
                 self.total_bits[None, :],
-                model.bitcell_um2[:, None],
-                model.periphery_overhead[:, None],
+                _per_topo(model.bitcell_um2),
+                _per_topo(model.periphery_overhead),
             )
         return area_mm2_arrays(
             self.total_bits.astype(np.float64),
@@ -572,7 +618,10 @@ class ExplorationGrid:
     feasible: np.ndarray             # (T,) capacity-feasible (Alg. I line 9)
     mode: str
     discipline: str
-    model: EnergyModel
+    # The scalar model the grid was evaluated with; None when the grid is
+    # a correlated-variant slice whose constants differ per topology (no
+    # single EnergyModel exists — see ModelTable.uniform_row).
+    model: EnergyModel | None
 
     @property
     def size(self) -> int:
@@ -640,7 +689,13 @@ class VariationGrid:
         return flat_index // n_r, flat_index % n_r
 
     def grid(self, v: int) -> ExplorationGrid:
-        """Variant ``v``'s sweep as a standard `ExplorationGrid`."""
+        """Variant ``v``'s sweep as a standard `ExplorationGrid`.
+
+        For a correlated table, a topology-dependent variant has no
+        single scalar model: the slice still carries every per-variant
+        metric (winners, energies, areas all work), but its ``model``
+        field is None — materialize per-cell models via
+        ``models.model(v, topology=...)`` instead."""
         return ExplorationGrid(
             recipes=self.recipes,
             topologies=self.topologies,
@@ -656,26 +711,25 @@ class VariationGrid:
             feasible=self.feasible,
             mode=self.mode,
             discipline=self.discipline,
-            model=self.models.model(v),
+            model=(
+                self.models.model(v) if self.models.uniform_row(v) else None
+            ),
         )
 
     def best_indices(self, max_latency_ns: float | None = None) -> np.ndarray:
         """Per-variant `select_best` winners: ``(V,)`` flat
         (topology-major) indices, same tiering/tie-breaking as the
-        static-model path on every variant."""
+        static-model path on every variant — all variants in one
+        `select_best_batch` array pass (the model-free fits/feasible
+        masks broadcast across the variant axis)."""
+        v = len(self.models)
         feas = np.broadcast_to(self.feasible[:, None], self.fits.shape)
-        return np.array(
-            [
-                select_best(
-                    self.energy_nj[v],
-                    self.fits,
-                    latency=self.latency_ns[v],
-                    max_latency=max_latency_ns,
-                    feasible=feas,
-                )
-                for v in range(len(self.models))
-            ],
-            dtype=np.int64,
+        return select_best_batch(
+            self.energy_nj.reshape(v, -1),
+            self.fits.reshape(1, -1),
+            latency=self.latency_ns.reshape(v, -1),
+            max_latency=max_latency_ns,
+            feasible=feas.reshape(1, -1),
         )
 
 
@@ -731,6 +785,7 @@ def evaluate_batch(
     """
     _, evaluate_grid = _grids()
     table, is_sweep = _as_table(model)
+    _check_topo_axis(table, topos)
     with enable_x64():
         out = evaluate_grid(
             work.ops, work.n_levels, topos.ops_per_cycle,
@@ -800,7 +855,7 @@ class SuiteGrid:
     feasible: np.ndarray             # (C, T) capacity-feasible per circuit
     mode: str
     discipline: str
-    model: EnergyModel
+    model: EnergyModel | None  # None for correlated-variant slices
 
     @property
     def size(self) -> int:
@@ -923,7 +978,9 @@ class SuiteVariationGrid:
         )
 
     def suite(self, v: int) -> SuiteGrid:
-        """One model variant's suite sweep as a standard `SuiteGrid`."""
+        """One model variant's suite sweep as a standard `SuiteGrid`
+        (``model`` is None for a topology-dependent correlated variant —
+        see `VariationGrid.grid`)."""
         return SuiteGrid(
             circuits=self.circuits,
             recipes=self.recipes,
@@ -940,7 +997,26 @@ class SuiteVariationGrid:
             feasible=self.feasible,
             mode=self.mode,
             discipline=self.discipline,
-            model=self.models.model(v),
+            model=(
+                self.models.model(v) if self.models.uniform_row(v) else None
+            ),
+        )
+
+    def best_indices(self, max_latency_ns: float | None = None) -> np.ndarray:
+        """Winners for every (circuit, variant) cell — ``(C, V)`` flat
+        (topology-major) indices from ONE `select_best_batch` pass over
+        the whole hypercube, bit-identical to running the per-variant
+        `select_best` loop on each circuit's `VariationGrid`."""
+        c, v = len(self.circuits), len(self.models)
+        feas = np.broadcast_to(
+            self.feasible[:, :, None], self.fits.shape
+        )  # (C, T, R)
+        return select_best_batch(
+            self.energy_nj.reshape(c, v, -1),
+            self.fits.reshape(c, 1, -1),
+            latency=self.latency_ns.reshape(c, v, -1),
+            max_latency=max_latency_ns,
+            feasible=feas.reshape(c, 1, -1),
         )
 
 
@@ -967,6 +1043,7 @@ def evaluate_suite(
     """
     _, evaluate = _suite_grids()
     table, is_sweep = _as_table(model)
+    _check_topo_axis(table, topos)
     with enable_x64():
         out = evaluate(
             suite.ops, suite.n_levels, topos.ops_per_cycle,
@@ -1019,6 +1096,68 @@ def evaluate_suite(
 # ---------------------------------------------------------------------------
 
 
+def _masked_tier_argmin(energy, tiers, xp=np):
+    """Per-batch-cell argmin over the first non-empty tier.
+
+    ``energy``: (..., N); ``tiers``: bool arrays of the same shape, most
+    restrictive first.  Each batch cell uses its own first tier with any
+    admissible entry; ties break to the lowest index along the last axis
+    (``argmin`` returns the first occurrence).  Pure array ops on the
+    ``xp`` namespace (numpy by default, ``jax.numpy`` under jit), so the
+    mesh/TPU path can fuse the filter after evaluate.
+    """
+    pool = tiers[-1]
+    for tier in tiers[-2::-1]:
+        pool = xp.where(tier.any(axis=-1, keepdims=True), tier, pool)
+    return xp.argmin(xp.where(pool, energy, xp.inf), axis=-1)
+
+
+def select_best_batch(
+    energy,
+    fits,
+    latency=None,
+    max_latency: float | None = None,
+    feasible=None,
+) -> np.ndarray:
+    """Batched `select_best`: winners for every batch cell in one masked
+    three-tier argmin pass — no per-variant python loop.
+
+    ``energy`` is ``(..., N)`` with the candidate implementations along
+    the LAST axis (flat C-order, e.g. a raveled topology-major (T, R)
+    grid) and arbitrary batch axes in front — ``(V, T*R)`` for one
+    circuit's variant sweep, ``(C, V, T*R)`` for a whole suite.
+    ``fits`` / ``latency`` / ``feasible`` broadcast against ``energy``,
+    so model-free masks are passed once (e.g. ``(C, 1, T*R)``) and serve
+    every variant row.
+
+    Tiering, tie-breaking (lowest flat index), and NaN handling are
+    exactly `select_best`'s, applied independently per batch cell;
+    raises if any batch cell has no finite energy at all.
+
+    Returns int64 winner indices of shape ``energy.shape[:-1]``.
+    """
+    energy = np.asarray(energy, dtype=float)
+    if energy.size == 0 or energy.shape[-1] == 0:
+        raise ValueError("select_best_batch on an empty grid")
+    finite = np.isfinite(energy)
+    if not finite.any(axis=-1).all():
+        raise ValueError(
+            "select_best_batch: a batch cell has no finite energies"
+        )
+    tier2 = np.broadcast_to(np.asarray(fits, dtype=bool), energy.shape) & finite
+    tier1 = tier2
+    if feasible is not None:
+        tier1 = tier1 & np.broadcast_to(
+            np.asarray(feasible, dtype=bool), energy.shape
+        )
+    if max_latency is not None and latency is not None:
+        tier1 = tier1 & (
+            np.broadcast_to(np.asarray(latency, dtype=float), energy.shape)
+            <= max_latency
+        )
+    return _masked_tier_argmin(energy, (tier1, tier2, finite))
+
+
 def select_best(
     energy,
     fits,
@@ -1043,24 +1182,35 @@ def select_best(
       1. fits capacity AND (feasible if given) AND (latency constraint
          if given),
       2. fits capacity,
-      3. everything.
+      3. everything with a finite energy.
+
+    Non-finite energies (NaN / ±inf — e.g. a pathological Monte-Carlo
+    variant) are inadmissible in every tier; if *all* energies are
+    non-finite there is no winner and a ValueError is raised.
 
     Returns the flat C-order index of the winner; ties break to the
     lowest flat index, like ``min`` over the scalar evaluation list.
+
+    The single-cell view of `select_best_batch` — one implementation of
+    the filter serves the scalar explorers, the variation sweeps, and
+    the mesh explorer alike.
     """
     energy = np.asarray(energy, dtype=float).ravel()
     if energy.size == 0:
         raise ValueError("select_best on an empty grid")
-    fits = np.asarray(fits, dtype=bool).ravel()
-    mask = fits.copy()
-    if feasible is not None:
-        mask &= np.asarray(feasible, dtype=bool).ravel()
-    if max_latency is not None and latency is not None:
-        mask &= np.asarray(latency, dtype=float).ravel() <= max_latency
-    for pool in (mask, fits, np.ones_like(fits)):
-        if pool.any():
-            return int(np.argmin(np.where(pool, energy, np.inf)))
-    raise AssertionError("unreachable")
+    return int(
+        select_best_batch(
+            energy[None, :],
+            np.asarray(fits, dtype=bool).ravel()[None, :],
+            latency=None
+            if latency is None
+            else np.asarray(latency, dtype=float).ravel()[None, :],
+            max_latency=max_latency,
+            feasible=None
+            if feasible is None
+            else np.asarray(feasible, dtype=bool).ravel()[None, :],
+        )[0]
+    )
 
 
 def winner_summary(winner_keys: Sequence[str]) -> tuple[dict[str, float], float]:
@@ -1077,13 +1227,17 @@ def winner_summary(winner_keys: Sequence[str]) -> tuple[dict[str, float], float]
 
 def select_best_worst(energy, fits) -> tuple[int, int]:
     """Table I companion: (argmin, argmax) energy over the fitting pool
-    (or over everything when nothing fits)."""
+    (or over everything when nothing fits).  Non-finite energies are
+    inadmissible at both ends; all-non-finite raises."""
     energy = np.asarray(energy, dtype=float).ravel()
     if energy.size == 0:
         raise ValueError("select_best_worst on an empty grid")
-    pool = np.asarray(fits, dtype=bool).ravel()
+    finite = np.isfinite(energy)
+    if not finite.any():
+        raise ValueError("select_best_worst: all energies are non-finite")
+    pool = np.asarray(fits, dtype=bool).ravel() & finite
     if not pool.any():
-        pool = np.ones_like(pool)
+        pool = finite
     best = int(np.argmin(np.where(pool, energy, np.inf)))
     worst = int(np.argmax(np.where(pool, energy, -np.inf)))
     return best, worst
@@ -1112,15 +1266,20 @@ def table2_batch(
 ) -> dict[str, np.ndarray]:
     """Vectorized ``sram.table2_metrics`` over a TopologyTable — the same
     ``sram.table2_arrays`` expressions, one array pass.  Outputs are (T,)
-    for a single `EnergyModel`, (V, T) for a `ModelTable` of variants."""
-    model = model or EnergyModel()
+    for a single `EnergyModel`, (V, T) for a `ModelTable` of variants
+    (whose scalar fields may be per-topology ``(V, T)``)."""
+    # `is None`, not falsiness — ModelTable defines __len__, so an `or`
+    # here would silently swap a falsy table for the nominal model.
+    if model is None:
+        model = EnergyModel()
     w = topos.ops_per_cycle.astype(float) * topos.n_macros
     if isinstance(model, ModelTable):
+        _check_topo_axis(model, topos)
         shim = _BroadcastModel(
-            f_clk_hz=model.f_clk_hz[:, None],
+            f_clk_hz=_per_topo(model.f_clk_hz),
             e_op_fj=tuple(model.e_op_fj[:, k: k + 1] for k in range(3)),
-            p_ctrl_mw=model.p_ctrl_mw[:, None],
-            pipeline_utilization=model.pipeline_utilization[:, None],
+            p_ctrl_mw=_per_topo(model.p_ctrl_mw),
+            pipeline_utilization=_per_topo(model.pipeline_utilization),
         )
         return table2_arrays(
             w[None, :], topos.area_mm2(model), shim, nor_fraction

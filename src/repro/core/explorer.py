@@ -278,7 +278,8 @@ def explore(
     if backend not in ("python", "jax"):
         raise ValueError(f"unknown backend {backend!r}")
     t0 = time.time()
-    model = model or EnergyModel()
+    if model is None:
+        model = EnergyModel()
 
     # Lines 3-6: create + characterize (or reuse the caller's cache).
     if cha is None:
@@ -354,10 +355,17 @@ def explore(
 
 
 def _variation_result(
-    vgrid: VariationGrid, max_latency_ns: float | None
+    vgrid: VariationGrid,
+    max_latency_ns: float | None,
+    idx: np.ndarray | None = None,
 ) -> VariationResult:
-    """Per-variant winners + yield summary for one circuit's sweep."""
-    idx = vgrid.best_indices(max_latency_ns)
+    """Per-variant winners + yield summary for one circuit's sweep.
+
+    ``idx``: precomputed ``(V,)`` winner indices — `explore_suite` passes
+    one row of the suite-wide `SuiteVariationGrid.best_indices` pass so
+    the whole (C, V) selection stage is a single batched array pass."""
+    if idx is None:
+        idx = vgrid.best_indices(max_latency_ns)
     pairs = [vgrid.unravel(int(i)) for i in idx]
     winners = [(vgrid.recipes[ri], vgrid.topologies[ti]) for ti, ri in pairs]
     share, best_yield = winner_summary(
@@ -409,12 +417,17 @@ def explore_suite(
 
     ``model_sweep``: a `sram.ModelTable` of energy-model variants
     (process corners, sensitivity grids, Monte-Carlo samples — variant 0
-    is the nominal model).  The same single compile/device call then
-    covers circuits x variants x topologies x recipes, and every
-    result's ``variation`` field carries the per-variant winners and the
-    yield summary (`VariationResult`).  The headline ``best``/``grid``
-    stay the nominal variant's, so downstream consumers are unchanged.
-    Mutually exclusive with ``model``; requires ``backend="jax"``.
+    is the nominal model).  Correlated (topology-dependent) tables —
+    e.g. `ModelTable.bitcell_sigma_per_macro` keyed on ``sram_list``'s
+    macro geometries — flow through the same kernels via their
+    ``(V, T)`` fields.  The same single compile/device call then covers
+    circuits x variants x topologies x recipes; the selection stage is
+    one batched `select_best_batch` pass over every (circuit, variant)
+    cell, and every result's ``variation`` field carries the
+    per-variant winners and the yield summary (`VariationResult`).  The
+    headline ``best``/``grid`` stay the nominal variant's, so downstream
+    consumers are unchanged.  Mutually exclusive with ``model``;
+    requires ``backend="jax"``.
 
     Returns ``{circuit: ExplorationResult}`` in the input's order; each
     result's ``wall_s`` is the suite wall time divided evenly across
@@ -429,7 +442,8 @@ def explore_suite(
             raise ValueError("model_sweep requires backend='jax'")
         model = model_sweep.model(0)  # nominal, for best materialization
     t0 = time.time()
-    model = model or EnergyModel()
+    if model is None:
+        model = EnergyModel()
 
     if cha is None:
         cha = characterize_suite(circuits, recipes, cache=cache, n_jobs=n_jobs)
@@ -466,15 +480,25 @@ def explore_suite(
 
     out = {}
     wall = (time.time() - t0) / max(1, len(names))
-    for name in names:
+    if model_sweep is not None:
+        # Selection stage for the whole hypercube: every (circuit,
+        # variant) winner from ONE batched masked-argmin pass.
+        suite_winners = sg.best_indices(max_latency_ns)  # (C, V)
+    for i, name in enumerate(names):
         variation = None
         if model_sweep is not None:
             vgrid = sg.variation(name)
-            variation = _variation_result(vgrid, max_latency_ns)
+            variation = _variation_result(
+                vgrid, max_latency_ns, idx=suite_winners[i]
+            )
             grid = vgrid.grid(0)  # nominal variant, the headline result
+            # the batched pass already holds variant 0's winner under
+            # the same tiers — no per-circuit re-selection needed
+            best_flat = int(suite_winners[i, 0])
         else:
             grid = sg.grid(name)
-        ti, ri = grid.unravel(grid.best_index(max_latency_ns))
+            best_flat = grid.best_index(max_latency_ns)
+        ti, ri = grid.unravel(best_flat)
         recipe, topo = grid.recipes[ri], sram_list[ti]
         best = _materialize(
             recipe, topo, cha[name][recipe], model, mode, discipline
@@ -505,6 +529,12 @@ def best_worst(result: ExplorationResult) -> tuple[Evaluation, Evaluation]:
                 "Evaluations (explore() always sets it)"
             )
         g = result.grid
+        if g.model is None:
+            raise ValueError(
+                "this grid is a correlated-variant slice with no single "
+                "scalar model; materialize cells via "
+                "ModelTable.model(v, topology=...) instead"
+            )
         i_best, i_worst = g.best_worst_indices()
         out = []
         for i in (i_best, i_worst):

@@ -32,7 +32,7 @@ import json
 
 import numpy as np
 
-from .batch import select_best, winner_summary
+from .batch import select_best, select_best_batch, winner_summary
 
 PJ_PER_FLOP = 0.6e-12
 PJ_PER_HBM_BYTE = 10e-12
@@ -166,8 +166,8 @@ def variation_summary(
 ) -> dict:
     """Per-variant winners + yield over an energy-constant sweep — the
     mesh analogue of `explorer.VariationResult`.  One vectorized
-    ``(V, N)`` energy matrix, then the shared `select_best` per variant;
-    variant 0 is the nominal constants."""
+    ``(V, N)`` energy matrix, then ONE shared `select_best_batch` pass
+    for every variant's winner; variant 0 is the nominal constants."""
     comp = np.array(
         [
             [
@@ -195,11 +195,14 @@ def variation_summary(
     )  # (V, N)
     fits = np.array([e.fits for e in evals])
     lat = np.array([e.latency_s for e in evals])
-    idx = [
-        select_best(energy[v], fits, latency=lat, max_latency=max_latency_s)
-        for v in range(len(variants))
+    idx = select_best_batch(
+        energy, fits[None, :], latency=lat[None, :],
+        max_latency=max_latency_s,
+    )
+    winners = [
+        dict(topo=evals[int(i)].topo, recipe=evals[int(i)].recipe)
+        for i in idx
     ]
-    winners = [dict(topo=evals[i].topo, recipe=evals[i].recipe) for i in idx]
     share, best_yield = winner_summary(
         [f"{w['topo']}/{w['recipe']}" for w in winners]
     )

@@ -277,6 +277,9 @@ def _scale_field(model: "EnergyModel", field: str, factor: float):
     return v * factor
 
 
+_PER_OP_FIELDS = ("e_op_fj", "e_op_marginal_fj")
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class ModelTable:
     """A stack of `EnergyModel` variants, one row per variant — the
@@ -284,7 +287,15 @@ class ModelTable:
 
     Every `EnergyModel` float field becomes a float64 array with a
     leading variant axis: ``(V,)`` for scalars, ``(V, 3)`` for the per-op
-    tuples.  The batched kernels (`batch.evaluate_batch` /
+    tuples.  Scalar fields may additionally carry a trailing
+    **per-topology axis** — ``(V, T)`` — for *correlated* (topology-
+    dependent) variation, e.g. `bitcell_sigma_per_macro`'s per-macro-
+    geometry mismatch: the batched kernels broadcast such fields along
+    the grid's topology axis, so variant ``v`` applies a different
+    constant to each topology.  A ``(V, 1)`` field broadcasts uniformly
+    and is bit-identical to the same values as a ``(V,)`` field.
+
+    The batched kernels (`batch.evaluate_batch` /
     `batch.evaluate_suite`) take these arrays as *traced* operands and
     vmap over the variant axis, so one jit compilation sweeps every
     variant — no per-model recompile, which is what makes corner /
@@ -296,29 +307,78 @@ class ModelTable:
     """
 
     names: tuple[str, ...]
-    f_clk_hz: np.ndarray                  # (V,)
+    f_clk_hz: np.ndarray                  # (V,) or (V, T)
     e_op_fj: np.ndarray                   # (V, 3)
     e_op_marginal_fj: np.ndarray          # (V, 3)
-    writeback_fj_nonresonant: np.ndarray  # (V,)
-    resonance_recycle_eta: np.ndarray     # (V,)
-    p_ctrl_mw: np.ndarray                 # (V,)
-    e_macro_cycle_fj: np.ndarray          # (V,)
-    e_col_cycle_fj: np.ndarray            # (V,)
-    alpha_mw_per_level: np.ndarray        # (V,)
-    bitcell_um2: np.ndarray               # (V,)
-    periphery_overhead: np.ndarray        # (V,)
-    pipeline_utilization: np.ndarray      # (V,)
+    writeback_fj_nonresonant: np.ndarray  # (V,) or (V, T)
+    resonance_recycle_eta: np.ndarray     # (V,) or (V, T)
+    p_ctrl_mw: np.ndarray                 # (V,) or (V, T)
+    e_macro_cycle_fj: np.ndarray          # (V,) or (V, T)
+    e_col_cycle_fj: np.ndarray            # (V,) or (V, T)
+    alpha_mw_per_level: np.ndarray        # (V,) or (V, T)
+    bitcell_um2: np.ndarray               # (V,) or (V, T)
+    periphery_overhead: np.ndarray        # (V,) or (V, T)
+    pipeline_utilization: np.ndarray      # (V,) or (V, T)
+    # Identity of the per-topology columns (SramTopology.name per column,
+    # set by the correlated generators): the batched paths refuse to
+    # sweep such a table against a *different* topology list of the same
+    # length, where each column's variation would silently land on the
+    # wrong macro geometry.  None for uniform / hand-built tables.
+    topology_names: "tuple[str, ...] | None" = None
 
     def __post_init__(self):
         v = len(self.names)
         if v == 0:
             raise ValueError("empty ModelTable")
+        t = None
         for f in dataclasses.fields(EnergyModel):
             arr = getattr(self, f.name)
             if arr.shape[0] != v:
                 raise ValueError(
                     f"field {f.name} has {arr.shape[0]} rows, expected {v}"
                 )
+            if f.name in _PER_OP_FIELDS:
+                if arr.ndim != 2 or arr.shape[1] != len(OP_TYPES):
+                    raise ValueError(
+                        f"per-op field {f.name} must be (V, {len(OP_TYPES)}),"
+                        f" got {arr.shape}"
+                    )
+            elif arr.ndim == 2:
+                width = arr.shape[1]
+                if width > 1:
+                    if t is not None and width != t:
+                        raise ValueError(
+                            f"field {f.name} has per-topology width {width},"
+                            f" but another field has {t}"
+                        )
+                    t = width
+            elif arr.ndim != 1:
+                raise ValueError(
+                    f"field {f.name} must be (V,) or (V, T), got {arr.shape}"
+                )
+        if (
+            self.topology_names is not None
+            and t is not None
+            and len(self.topology_names) != t
+        ):
+            raise ValueError(
+                f"topology_names has {len(self.topology_names)} entries "
+                f"but the per-topology fields have width {t}"
+            )
+
+    @property
+    def n_topologies(self) -> "int | None":
+        """Width of the per-topology axis when any scalar field is
+        ``(V, T)``-shaped with T > 1; ``None`` for uniform tables
+        (including ``(V, 1)`` broadcast fields)."""
+        t = None
+        for f in dataclasses.fields(EnergyModel):
+            if f.name in _PER_OP_FIELDS:
+                continue
+            arr = getattr(self, f.name)
+            if arr.ndim == 2 and arr.shape[1] > 1:
+                t = arr.shape[1]
+        return t
 
     @classmethod
     def from_models(
@@ -348,7 +408,11 @@ class ModelTable:
         constants scale by ``1 -+ spread`` while the achievable clock
         scales the opposite way (fast silicon: less energy per op, higher
         f_clk).  Row 0 is the typical (nominal) model."""
-        base = base or EnergyModel()
+        # `is None`, not falsiness: a ModelTable passed by mistake defines
+        # __len__, and an otherwise-falsy base must error loudly, not be
+        # silently swapped for the nominal model.
+        if base is None:
+            base = EnergyModel()
 
         def corner(k_energy: float, k_clk: float) -> EnergyModel:
             kw = {f: _scale_field(base, f, k_energy)
@@ -371,7 +435,8 @@ class ModelTable:
     ) -> "ModelTable":
         """One-at-a-time ±``rel`` perturbation grid: the nominal model
         plus, for each swept field, a +rel and a -rel variant."""
-        base = base or EnergyModel()
+        if base is None:
+            base = EnergyModel()
         fields = tuple(fields) if fields is not None else SWEEPABLE_FIELDS
         unknown = [f for f in fields if f not in SWEEPABLE_FIELDS]
         if unknown:
@@ -398,10 +463,12 @@ class ModelTable:
         """``n`` seeded Monte-Carlo samples (row 0 is the nominal model,
         rows 1..n-1 scale each swept field by an independent
         ``N(1, sigma)`` factor, floored at 0.05 to keep the model in its
-        physical regime)."""
+        physical regime; ``pipeline_utilization`` is additionally capped
+        at 1.0 — more than one op per cycle slot is unphysical)."""
         if n < 1:
             raise ValueError("n must be >= 1")
-        base = base or EnergyModel()
+        if base is None:
+            base = EnergyModel()
         fields = tuple(fields) if fields is not None else SWEEPABLE_FIELDS
         unknown = [f for f in fields if f not in SWEEPABLE_FIELDS]
         if unknown:
@@ -419,19 +486,113 @@ class ModelTable:
                     kw[f] = v * float(
                         max(rng.normal(1.0, sigma), 0.05)
                     )
+                    if f == "pipeline_utilization":
+                        kw[f] = min(kw[f], 1.0)
             models.append(dataclasses.replace(base, **kw))
             names.append(f"mc{i}")
         return cls.from_models(models, names=names)
 
-    def model(self, i: int) -> "EnergyModel":
+    @classmethod
+    def bitcell_sigma_per_macro(
+        cls,
+        topologies: "Sequence[SramTopology]",
+        base: "EnergyModel | None" = None,
+        n: int = 16,
+        sigma: float = 0.05,
+        seed: int = 0,
+        fields: Sequence[str] = (
+            "bitcell_um2", "e_macro_cycle_fj", "e_col_cycle_fj"
+        ),
+        ref_cells: int = 128 * 128,
+    ) -> "ModelTable":
+        """Correlated (topology-dependent) Monte-Carlo: per-macro-geometry
+        mismatch keyed on each topology's rows x cols.
+
+        Local (bitcell-level) variation averages out over a macro
+        Pelgrom-style, so the per-macro sigma shrinks with array size:
+        ``sigma_t = sigma * sqrt(ref_cells / (rows_t * cols_t))`` with
+        ``ref_cells`` the paper's 128x128 bank.  Each swept field becomes
+        a ``(V, T)`` array — variant ``v`` scales topology ``t`` by an
+        independent ``N(1, sigma_t)`` factor (floored at 0.05;
+        ``pipeline_utilization`` capped at 1.0) — which the batched
+        kernels broadcast along the grid's topology axis.  Row 0 is the
+        nominal model.  ``topologies`` accepts a `SramTopology` sequence
+        or a `batch.TopologyTable` and must match the topology table the
+        sweep is evaluated against.
+        """
+        if n < 1:
+            raise ValueError("n must be >= 1")
+        if base is None:
+            base = EnergyModel()
+        topos = tuple(getattr(topologies, "topologies", topologies))
+        if not topos:
+            raise ValueError("empty topology list")
+        fields = tuple(fields)
+        bad = [
+            f for f in fields
+            if f not in SWEEPABLE_FIELDS or f in _PER_OP_FIELDS
+        ]
+        if bad:
+            raise ValueError(f"not sweepable per topology: {bad}")
+        cells = np.array([t.rows * t.cols for t in topos], dtype=np.float64)
+        sigma_t = sigma * np.sqrt(ref_cells / cells)           # (T,)
+        rng = np.random.default_rng(seed)
+        names = ("nominal",) + tuple(f"corr{i}" for i in range(1, n))
+        table = cls.from_models([base] * n, names=names)
+        kw = {}
+        for f in fields:
+            factors = np.ones((n, len(topos)), dtype=np.float64)
+            if n > 1:
+                factors[1:] = np.maximum(
+                    rng.normal(1.0, sigma_t[None, :], (n - 1, len(topos))),
+                    0.05,
+                )
+            vals = getattr(base, f) * factors
+            if f == "pipeline_utilization":
+                vals = np.minimum(vals, 1.0)
+            kw[f] = vals
+        return dataclasses.replace(
+            table, topology_names=tuple(t.name for t in topos), **kw
+        )
+
+    def uniform_row(self, i: int) -> bool:
+        """True when variant ``i`` applies the same constants to every
+        topology (always true for 1-D / ``(V, 1)`` fields), i.e. when
+        ``model(i)`` can materialize it as a single `EnergyModel`."""
+        for f in dataclasses.fields(EnergyModel):
+            if f.name in _PER_OP_FIELDS:
+                continue
+            v = getattr(self, f.name)[i]
+            if np.ndim(v) and not np.all(v == v.flat[0]):
+                return False
+        return True
+
+    def model(self, i: int, topology: "int | None" = None) -> "EnergyModel":
         """Row ``i`` re-materialized as a plain `EnergyModel` (exact:
-        float64 -> python float round-trips bit-for-bit)."""
+        float64 -> python float round-trips bit-for-bit).
+
+        For correlated tables, ``topology`` selects the column of each
+        ``(V, T)`` field; without it, a row whose per-topology values
+        differ has no single-`EnergyModel` representation and raises.
+        """
         kw = {}
         for f in dataclasses.fields(EnergyModel):
             v = getattr(self, f.name)[i]
-            kw[f.name] = (
-                tuple(float(x) for x in v) if np.ndim(v) else float(v)
-            )
+            if f.name in _PER_OP_FIELDS:
+                kw[f.name] = tuple(float(x) for x in v)
+            elif np.ndim(v):  # (T,) per-topology row
+                if topology is not None:
+                    kw[f.name] = float(v[topology if v.shape[0] > 1 else 0])
+                elif np.all(v == v.flat[0]):
+                    kw[f.name] = float(v.flat[0])
+                else:
+                    raise ValueError(
+                        f"variant {i} ({self.names[i]!r}) is topology-"
+                        f"dependent in field {f.name}; pass topology= to "
+                        f"materialize one column"
+                    )
+            else:
+                kw[f.name] = float(v)
         return EnergyModel(**kw)
 
     def models(self) -> "list[EnergyModel]":
@@ -496,7 +657,8 @@ def evaluate(
     from .mapping import MappingResult  # circular-import guard
 
     assert isinstance(schedule, MappingResult)
-    model = model or EnergyModel()
+    if model is None:
+        model = EnergyModel()
     cycles = schedule.total_cycles
     t_ns = cycles / model.f_clk_hz * 1e9
     n_ops = schedule.op_counts
@@ -567,13 +729,15 @@ def table2_metrics(
     8 KB single-macro range (88.2-106.6 GOPS, 8.64-10.45 TOPS/W,
     551-666 GOPS/mm^2); the NAND/NOR mix sets where in the range we land.
     """
-    model = model or EnergyModel()
+    if model is None:
+        model = EnergyModel()
     w = topo.ops_per_cycle_per_macro * topo.n_macros
     return table2_arrays(w, topo.area_mm2(model), model, nor_fraction)
 
 
 def peak_throughput_gops(topo: SramTopology, model: EnergyModel | None = None) -> float:
-    model = model or EnergyModel()
+    if model is None:
+        model = EnergyModel()
     return (
         topo.ops_per_cycle_per_macro
         * topo.n_macros
@@ -596,7 +760,8 @@ def inductor_size_nh(
     bitline capacitance increases N times for N write drivers"), so
     C_total = cols x rows x C_cell.
     """
-    model = model or EnergyModel()
+    if model is None:
+        model = EnergyModel()
     f_res = f_res_hz or model.f_clk_hz
     c_total_f = topo.cols * topo.rows * c_bl_per_cell_ff * 1e-15
     l_h = 1.0 / ((2 * math.pi * f_res) ** 2 * c_total_f)

@@ -30,15 +30,18 @@ from repro.core.batch import (
     WorkloadTable,
     evaluate_batch,
     evaluate_suite,
+    select_best,
     table2_batch,
     trace_counts,
 )
 from repro.core.explorer import characterize_recipes, explore_suite
+from repro.core.mapping import schedule_stats
 from repro.core.sram import (
     SWEEPABLE_FIELDS,
     TOPOLOGY_LIBRARY,
     EnergyModel,
     ModelTable,
+    evaluate,
 )
 
 try:
@@ -352,6 +355,279 @@ def test_monte_carlo_generator_errors_and_fields():
         m = table.model(v)
         assert m.f_clk_hz != base.f_clk_hz
         assert m.p_ctrl_mw == base.p_ctrl_mw  # unswept fields untouched
+
+
+def test_monte_carlo_clamps_utilization():
+    # regression: N(1, sigma) at large sigma used to push samples past
+    # 1.0 ops per cycle slot, inflating throughput for those variants
+    table = ModelTable.monte_carlo(n=64, sigma=2.0, seed=3)
+    assert table.pipeline_utilization.max() <= 1.0
+    assert table.pipeline_utilization.min() > 0.0
+    # the floor still applies to every other field
+    assert (table.p_ctrl_mw > 0).all()
+
+
+def test_empty_model_table_raises():
+    # constructing a 0-row table is rejected outright...
+    with pytest.raises(ValueError, match="empty ModelTable"):
+        ModelTable(
+            names=(),
+            **{
+                f.name: np.zeros((0, 3) if f.name in
+                                 ("e_op_fj", "e_op_marginal_fj") else (0,))
+                for f in dataclasses.fields(EnergyModel)
+            },
+        )
+    # ...and a degenerate falsy table smuggled past __post_init__ errors
+    # loudly instead of being silently swapped for the nominal model by
+    # a truthiness check (ModelTable defines __len__)
+    rogue = object.__new__(ModelTable)
+    object.__setattr__(rogue, "names", ())
+    for f in dataclasses.fields(EnergyModel):
+        shape = (0, 3) if f.name in ("e_op_fj", "e_op_marginal_fj") else (0,)
+        object.__setattr__(rogue, f.name, np.zeros(shape))
+    assert not rogue  # falsy: the old `model or EnergyModel()` dropped it
+    tt = TopologyTable.from_topologies(TOPOLOGY_LIBRARY[:3])
+    with pytest.raises(ValueError, match="empty ModelTable"):
+        table2_batch(tt, rogue)
+    with pytest.raises(ValueError, match="empty ModelTable"):
+        evaluate_batch(random_workload(np.random.default_rng(0)), tt, rogue)
+
+
+# ---------------------------------------------------------------------------
+# Correlated (V, T) variation: per-topology model fields
+# ---------------------------------------------------------------------------
+
+
+def as_v1_table(table: ModelTable) -> ModelTable:
+    """The same table with every scalar field reshaped (V,) -> (V, 1)."""
+    kw = {}
+    for f in dataclasses.fields(EnergyModel):
+        arr = getattr(table, f.name)
+        if f.name not in ("e_op_fj", "e_op_marginal_fj"):
+            arr = arr[:, None]
+        kw[f.name] = arr
+    return ModelTable(names=table.names, **kw)
+
+
+def test_v1_table_bit_identical_to_uniform_sweep():
+    rng = np.random.default_rng(17)
+    work = random_workload(rng)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    table = ModelTable.monte_carlo(n=4, sigma=0.2, seed=9)
+    v1 = as_v1_table(table)
+    assert v1.n_topologies is None  # (V, 1) broadcasts uniformly
+    a = evaluate_batch(work, topos, table)
+    b = evaluate_batch(work, topos, v1)
+    for k in METRIC_KEYS:
+        np.testing.assert_array_equal(getattr(a, k), getattr(b, k))
+    np.testing.assert_array_equal(a.area_mm2, b.area_mm2)
+    np.testing.assert_array_equal(a.best_indices(), b.best_indices())
+    # table2 and the (V, 1) model() round-trip agree too
+    tb_a, tb_b = table2_batch(topos, table), table2_batch(topos, v1)
+    for k in tb_a:
+        np.testing.assert_array_equal(tb_a[k], tb_b[k])
+    assert v1.model(2) == table.model(2)
+
+
+def test_correlated_generator_shapes_and_validation():
+    table = ModelTable.bitcell_sigma_per_macro(
+        TOPOLOGY_LIBRARY, n=4, sigma=0.2, seed=0
+    )
+    assert table.n_topologies == len(TOPOLOGY_LIBRARY)
+    assert table.bitcell_um2.shape == (4, 12)
+    assert table.f_clk_hz.shape == (4,)  # unswept fields stay (V,)
+    assert table.model(0) == EnergyModel()  # row 0 nominal (uniform)
+    # smaller macros see a wider spread (Pelgrom-style area averaging):
+    # column 0 is (256x128), column 11 is (256x1024)
+    spread = table.bitcell_um2[1:].std(axis=0)
+    assert spread[0] > spread[9]
+    # per-op and unknown fields are rejected
+    with pytest.raises(ValueError, match="not sweepable"):
+        ModelTable.bitcell_sigma_per_macro(
+            TOPOLOGY_LIBRARY, fields=("e_op_fj",)
+        )
+    with pytest.raises(ValueError, match="empty topology"):
+        ModelTable.bitcell_sigma_per_macro(())
+    # utilization swept per-topology is clamped like monte_carlo's
+    big = ModelTable.bitcell_sigma_per_macro(
+        TOPOLOGY_LIBRARY, n=32, sigma=3.0, seed=1,
+        fields=("pipeline_utilization",),
+    )
+    assert big.pipeline_utilization.max() <= 1.0
+    # a mismatched per-topology axis is rejected by the batched paths
+    short = TopologyTable.from_topologies(TOPOLOGY_LIBRARY[:5])
+    table_12 = ModelTable.bitcell_sigma_per_macro(TOPOLOGY_LIBRARY, n=2)
+    with pytest.raises(ValueError, match="per-topology axis"):
+        evaluate_batch(
+            random_workload(np.random.default_rng(0)), short, table_12
+        )
+    with pytest.raises(ValueError, match="per-topology axis"):
+        table2_batch(short, table_12)
+    # ...and so is a same-length but reordered/different topology list,
+    # where each column's variation would land on the wrong geometry
+    assert table_12.topology_names == tuple(
+        t.name for t in TOPOLOGY_LIBRARY
+    )
+    reordered = TopologyTable.from_topologies(TOPOLOGY_LIBRARY[::-1])
+    with pytest.raises(ValueError, match="generated for"):
+        evaluate_batch(
+            random_workload(np.random.default_rng(0)), reordered, table_12
+        )
+    with pytest.raises(ValueError, match="generated for"):
+        table2_batch(reordered, table_12)
+    # mixed widths inside one table are rejected at construction
+    bad_kw = {
+        f.name: getattr(table_12, f.name)
+        for f in dataclasses.fields(EnergyModel)
+    }
+    bad_kw["p_ctrl_mw"] = np.ones((2, 5))
+    with pytest.raises(ValueError, match="per-topology width"):
+        ModelTable(names=table_12.names, **bad_kw)
+
+
+def test_correlated_variant_slices_work_without_scalar_model():
+    """grid(v)/suite(v) slices of a correlated sweep stay usable for
+    every variant; only the scalar-model materialization (which is
+    genuinely ill-defined per topology-dependent variant) raises."""
+    rng = np.random.default_rng(3)
+    work = random_workload(rng, n_recipes=3)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    table = ModelTable.bitcell_sigma_per_macro(
+        TOPOLOGY_LIBRARY, n=3, sigma=0.3, seed=4
+    )
+    assert table.uniform_row(0) and not table.uniform_row(1)
+    vg = evaluate_batch(work, topos, table)
+    g0, g1 = vg.grid(0), vg.grid(1)
+    assert g0.model == EnergyModel()
+    assert g1.model is None  # no single EnergyModel represents row 1
+    # the slice still filters/selects like any grid
+    assert g1.best_index() == int(vg.best_indices()[1])
+    assert g1.fit_energies().size > 0
+    suite = SuiteTable.from_workloads({"a": work, "b": work})
+    svg = evaluate_suite(suite, topos, table)
+    assert svg.suite(0).model == EnergyModel()
+    assert svg.suite(1).model is None
+    # best_worst needs a scalar model to materialize Evaluations: clear
+    # error instead of silently evaluating with the wrong constants
+    from repro.core.explorer import ExplorationResult, best_worst
+
+    res = ExplorationResult(
+        circuit="x", best=None, inductor_nh=0.0, opt_gate_recipe=(),
+        opt_level_recipe=(), evaluations=[], n_recipes=1, wall_s=0.0,
+        backend="jax", grid=g1, cha={},
+    )
+    with pytest.raises(ValueError, match="no single scalar model"):
+        best_worst(res)
+
+
+def test_correlated_sweep_matches_scalar_path():
+    """Every (variant, topology) cell of a correlated sweep equals the
+    scalar path run with that cell's materialized EnergyModel — the
+    same parity contract (rtol 1e-12) as the uniform grids."""
+    rng = np.random.default_rng(5)
+    items = [
+        ((str(i),), stats_from_levels(
+            [tuple(int(x) for x in rng.integers(0, 800, 3))
+             for _ in range(int(rng.integers(1, 6)))]
+        ))
+        for i in range(4)
+    ]
+    work = WorkloadTable.from_stats(items)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    table = ModelTable.bitcell_sigma_per_macro(
+        TOPOLOGY_LIBRARY, n=3, sigma=0.4, seed=21
+    )
+    vg = evaluate_batch(work, topos, table)
+    for v in range(3):
+        for t in range(len(TOPOLOGY_LIBRARY)):
+            m = table.model(v, topology=t)
+            topo = TOPOLOGY_LIBRARY[t]
+            for r, (_, stats) in enumerate(items):
+                sched = schedule_stats(stats, topo)
+                met = evaluate(sched, topo, m)
+                np.testing.assert_allclose(
+                    vg.energy_nj[v, t, r], met.energy_nj, rtol=1e-12
+                )
+                np.testing.assert_allclose(
+                    vg.latency_ns[v, t, r], met.latency_ns, rtol=1e-12
+                )
+                np.testing.assert_allclose(
+                    vg.throughput_gops[v, t, r], met.throughput_gops,
+                    rtol=1e-12,
+                )
+                np.testing.assert_allclose(
+                    vg.area_mm2[v, t], met.area_mm2, rtol=1e-12
+                )
+
+
+def test_suite_best_indices_match_select_best_loop(bar_suite):
+    """Acceptance: the batched (C, V) selection pass returns bit-identical
+    winners to the per-variant `select_best` loop across every generator
+    on the full 65-recipe x 12-topology suite."""
+    suite, cha = bar_suite
+    suite_table = SuiteTable.from_cha(cha)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    tables = {
+        "corners": ModelTable.corners(spread=0.15),
+        "sensitivity": ModelTable.sensitivity(rel=0.1),
+        "monte_carlo": ModelTable.monte_carlo(n=7, sigma=0.3, seed=13),
+        "correlated": ModelTable.bitcell_sigma_per_macro(
+            TOPOLOGY_LIBRARY, n=7, sigma=0.3, seed=13
+        ),
+    }
+    for max_lat in (None, 40.0):
+        for kind, table in tables.items():
+            svg = evaluate_suite(suite_table, topos, table)
+            assert svg.energy_nj.shape[2:] == (12, 65)
+            got = svg.best_indices(max_lat)
+            assert got.shape == (len(svg.circuits), len(table))
+            for c, name in enumerate(svg.circuits):
+                vgrid = svg.variation(name)
+                feas = np.broadcast_to(
+                    vgrid.feasible[:, None], vgrid.fits.shape
+                )
+                for v in range(len(table)):
+                    ref = select_best(
+                        vgrid.energy_nj[v], vgrid.fits,
+                        latency=vgrid.latency_ns[v], max_latency=max_lat,
+                        feasible=feas,
+                    )
+                    assert int(got[c, v]) == ref, (kind, max_lat, name, v)
+
+
+def test_correlated_explore_suite_end_to_end(bar_suite):
+    """Acceptance: a (V, T) correlated sweep through
+    `explore_suite(model_sweep=...)` -> yield summary, in ONE compile."""
+    suite, cha = bar_suite
+    table = ModelTable.bitcell_sigma_per_macro(
+        TOPOLOGY_LIBRARY, n=5, sigma=0.5, seed=2
+    )
+    before = trace_counts().get("evaluate_suite", 0)
+    res = explore_suite(suite, cha=cha, model_sweep=table)["bar"]
+    assert trace_counts().get("evaluate_suite", 0) == before + 1
+    var = res.variation
+    assert var is not None and var.n_variants == 5
+    assert res.n_evaluations == 65 * 12
+    assert sum(var.winner_share.values()) == pytest.approx(1.0)
+    assert 0.0 < var.best_yield <= 1.0
+    # winners equal the per-variant loop on the circuit's VariationGrid
+    feas = np.broadcast_to(var.grid.feasible[:, None], var.grid.fits.shape)
+    for v, (recipe, topo) in enumerate(var.winners):
+        ti, ri = var.grid.unravel(
+            select_best(
+                var.grid.energy_nj[v], var.grid.fits,
+                latency=var.grid.latency_ns[v], feasible=feas,
+            )
+        )
+        assert (var.grid.recipes[ri], var.grid.topologies[ti]) == (
+            recipe, topo
+        )
+    # headline best stays the nominal variant's
+    nominal = explore_suite(suite, cha=cha, model=table.model(0))["bar"]
+    assert (res.best.recipe, res.best.topo) == (
+        nominal.best.recipe, nominal.best.topo
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,9 @@ Three front-half configurations are timed:
 
 The back half is timed both ways: the per-circuit scalar loop
 (``backend="python"``) and the one-call suite sweep
-(`explorer.explore_suite`, circuits x recipes x topologies vmapped).
+(`explorer.explore_suite`, circuits x recipes x topologies vmapped,
+riding the fused device-resident pipeline: FilterEnergy runs inside the
+jitted pass and only the winners cross the host boundary).
 Cross-checks that every backend picks the identical best implementation.
 
     PYTHONPATH=src python -m benchmarks.bench_explorer            # full: 9 circuits, 65 recipes
@@ -169,6 +171,7 @@ def run(
         scale=scale,
         n_recipes=len(recipes) + 1,  # + baseline ()
         n_circuits=len(suite),
+        fused_selection=True,  # explore_suite runs FilterEnergy on device
         per_circuit=per_circuit,
         total=dict(
             implementations=totals["implementations"],

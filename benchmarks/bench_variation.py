@@ -18,6 +18,13 @@ between the vmapped sweep, the serial jax runs, and (optionally) the
 scalar python backend, records the jit trace count, and merges a
 ``"variation"`` section into ``BENCH_explorer.json``.
 
+Also times the *fused device-resident* back half
+(`batch.evaluate_select_suite`: evaluate + three-tier FilterEnergy in
+one jitted pass, only (C, V) winners + per-winner metrics transferred)
+against the host path (materialize the full (C, V, T, R) tensors, then
+`select_best_batch`), recording the device->host payload bytes of each
+— the headline number of the device-resident pipeline.
+
     PYTHONPATH=src python -m benchmarks.bench_variation           # full: 9 circuits, 65 recipes, 16 variants
     PYTHONPATH=src python -m benchmarks.bench_variation --smoke   # CI: 4 circuits, 9 recipes
 """
@@ -128,8 +135,11 @@ def run_model_sweep(
     """
     from repro.core import circuits as C
     from repro.core.batch import (
+        _METRIC_KEYS,
+        _SCHED_KEYS,
         SuiteTable,
         TopologyTable,
+        evaluate_select_suite,
         evaluate_suite,
         select_best,
         trace_counts,
@@ -248,6 +258,45 @@ def run_model_sweep(
         np.array_equal(svg_corr.best_indices(), loop_selection(svg_corr))
     )
 
+    # Fused device-resident back half: evaluate + three-tier FilterEnergy
+    # in ONE jitted pass — only the (C, V) winners + per-winner metrics
+    # cross the host boundary (the grid stays a lazy device view), vs the
+    # host path that pulls the full (C, V, T, R) float64 tensors across
+    # before reducing them to the same (C, V) indices.
+    host_idx = svg.best_indices()
+    before_fused = trace_counts().get("fused_suite", 0)
+    sg_fused, sel = evaluate_select_suite(suite_table, topos, table)
+    fused_compiles = trace_counts().get("fused_suite", 0) - before_fused
+    fused_agree = bool(
+        np.array_equal(sel.winner_idx.astype(np.int64), host_idx)
+    )
+    flat_e = svg.energy_nj.reshape(len(svg.circuits), n_variants, -1)
+    fused_agree &= bool(
+        np.array_equal(
+            np.take_along_axis(flat_e, host_idx[..., None], -1)[..., 0],
+            sel.winner_energy_nj,
+        )
+    )
+    # Payload across the host boundary: the host path materializes every
+    # schedule + metric tensor; the fused path only the SelectionResult.
+    payload_host = sum(
+        getattr(svg, k).nbytes for k in _METRIC_KEYS + _SCHED_KEYS
+    )
+    payload_fused = sel.payload_bytes
+
+    def fused_sweep():
+        # winners + per-winner metrics land on host; tensors stay put
+        return evaluate_select_suite(suite_table, topos, table)[1]
+
+    def host_sweep():
+        # today's path: materialize the full tensors, then reduce
+        g = evaluate_suite(suite_table, topos, table)
+        return g.best_indices()
+
+    t_fused = timeit(fused_sweep, n_warmup=0, n_iter=n_iter)
+    t_host = timeit(host_sweep, n_warmup=0, n_iter=n_iter)
+    fused_speedup = t_host / t_fused if t_fused > 0 else float("inf")
+
     record = dict(
         scale=scale,
         n_circuits=len(suite),
@@ -269,6 +318,14 @@ def run_model_sweep(
         selection_agree=selection_agree,
         correlated_compiles=corr_compiles,
         correlated_agree=bool(corr_agree),
+        fused_us=round(t_fused, 1),
+        host_us=round(t_host, 1),
+        fused_speedup=round(fused_speedup, 2),
+        fused_agree=fused_agree,
+        fused_compiles=fused_compiles,
+        payload_fused_bytes=int(payload_fused),
+        payload_host_bytes=int(payload_host),
+        payload_shrink=round(payload_host / max(1, payload_fused), 1),
     )
 
     merge_json(out_json, {merge_key: record})
@@ -279,7 +336,10 @@ def run_model_sweep(
         f"variants={n_variants};impls={svg.size};compiles={compiles};"
         f"agree={all_agree};selection_speedup={sel_speedup:.1f}x;"
         f"selection_agree={selection_agree};"
-        f"correlated_compiles={corr_compiles};json={out_json}",
+        f"correlated_compiles={corr_compiles};"
+        f"fused_agree={fused_agree};fused_compiles={fused_compiles};"
+        f"payload={payload_host}B->{payload_fused}B "
+        f"({payload_host / max(1, payload_fused):.0f}x);json={out_json}",
     )
     return record
 

@@ -88,6 +88,10 @@ def main():
             print(f"  model sweep ({var.n_variants} variants): "
                   f"best_yield={var.best_yield:.2f} "
                   f"latency_yield={var.latency_yield:.2f}")
+            q = var.energy_quantiles
+            print(f"  winner energy [nJ]: p5={q[0.05]:.4g} "
+                  f"median={q[0.5]:.4g} p95={q[0.95]:.4g} "
+                  f"cvar(0.9)={var.cvar(0.9):.4g}")
             for impl, share in sorted(var.winner_share.items(),
                                       key=lambda kv: -kv[1]):
                 print(f"    {impl:32s} wins {share:.0%} of variants")

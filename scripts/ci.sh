@@ -78,6 +78,15 @@ assert v["correlated_agree"], \
 assert v["correlated_compiles"] == 1, \
     f"a correlated (V, T) sweep must cost exactly one jit trace, " \
     f"got {v['correlated_compiles']}"
+assert v["fused_agree"], \
+    "fused on-device selection disagrees with host select_best_batch " \
+    "on a (circuit, variant) winner"
+assert v["fused_compiles"] == 1, \
+    f"the fused evaluate+select sweep must cost exactly one jit " \
+    f"trace, got {v['fused_compiles']}"
+assert v["payload_fused_bytes"] < v["payload_host_bytes"], \
+    f"fused device->host payload ({v['payload_fused_bytes']}B) must " \
+    f"shrink vs the full-tensor transfer ({v['payload_host_bytes']}B)"
 print(f"model sweep: {v['n_variants']} variants x "
       f"{v['implementations'] // v['n_variants']} designs in "
       f"{v['sweep_us']:.0f}us, serial {v['serial_us']:.0f}us "
@@ -85,7 +94,10 @@ print(f"model sweep: {v['n_variants']} variants x "
       f"selection {v['selection_loop_us']:.0f}us -> "
       f"{v['selection_batched_us']:.0f}us "
       f"({v['selection_speedup']}x); correlated sweep "
-      f"compiles={v['correlated_compiles']}")
+      f"compiles={v['correlated_compiles']}; fused pipeline "
+      f"payload {v['payload_host_bytes']}B -> {v['payload_fused_bytes']}B "
+      f"({v['payload_shrink']}x), {v['host_us']:.0f}us -> "
+      f"{v['fused_us']:.0f}us, compiles={v['fused_compiles']}")
 EOF
 fi
 echo "CI OK"

@@ -24,7 +24,17 @@ ChaAIG -> Evaluate -> FilterEnergy sweep is one jitted `jax.numpy` pass:
     for every (circuit, variant) cell of a variation sweep in one masked
     three-tier argmin pass (non-finite energies are inadmissible in
     every tier), so the selection stage scales with the evaluate stage
-    instead of looping per variant in python.
+    instead of looping per variant in python;
+  * ``evaluate_select_batch`` / ``evaluate_select_suite`` — the fused
+    **device-resident** pipeline: the same three-tier argmin runs as
+    pure-jnp ops inside the jitted evaluate kernel, the device returns a
+    ``SelectionResult`` (winner indices + per-winner metrics, a few KB)
+    instead of the full float64 metric tensors, and the returned grids
+    are *lazy* (`_LazyArrays`) — their tensors stay on device until
+    first access.  The variant axis optionally shards across devices
+    (`_shard_variants`); ``select_best_batch`` stays as the host-side
+    parity reference.  ``select_best_batch_device`` is the standalone
+    jitted filter for precomputed metric arrays (mesh explorer).
 
 Parity contract: every cycle/flag quantity is exact integer arithmetic,
 and the energy expressions are the *same functions* the scalar path uses
@@ -95,6 +105,17 @@ def _load_jax() -> None:
     jax, jnp, enable_x64 = _jax, _jnp, _enable_x64
 
 
+def jax_available() -> bool:
+    """Whether the jitted engine can run here — lets callers pick the
+    device or host filter up front instead of catching mid-call errors
+    (which would also swallow genuine jax failures)."""
+    try:
+        _load_jax()
+    except RuntimeError:
+        return False
+    return True
+
+
 # Per-kernel jit trace counters.  The counter lines inside the kernel
 # bodies execute only while jax is *tracing* (never on cached dispatch),
 # so a test can assert that an N-variant sweep — or a float-only model
@@ -115,13 +136,14 @@ class ModelParams(NamedTuple):
     kernel.
 
     Scalar fields are ``(V,)`` for uniform sweeps or ``(V, T)`` for
-    correlated (topology-dependent) variation: after the variant vmap
-    each leaf is ``()`` or ``(T,)``, and the grid arithmetic (all
-    ``(R, T)``-shaped) broadcasts either along its trailing topology
-    axis — the same float ops, no new compile path."""
+    correlated (topology-dependent) variation — per-op fields likewise
+    ``(V, 3)`` or ``(V, T, 3)``: after the variant vmap each leaf is
+    ``()`` / ``(T,)`` / ``(3,)`` / ``(T, 3)``, and the grid arithmetic
+    (all ``(R, T)``-shaped) broadcasts either along its trailing
+    topology axis — the same float ops, no new compile path."""
 
     f_clk_hz: np.ndarray            # (V,) or (V, T)
-    e_op_marginal_fj: np.ndarray    # (V, 3)
+    e_op_marginal_fj: np.ndarray    # (V, 3) or (V, T, 3)
     p_ctrl_mw: np.ndarray           # (V,) or (V, T)
     e_macro_cycle_fj: np.ndarray    # (V,) or (V, T)
     e_col_cycle_fj: np.ndarray      # (V,) or (V, T)
@@ -487,18 +509,25 @@ def _evaluate_core(ops, n_levels, width, mpt, is_single, total_bits, cols,
     cycles_f = cycles.astype(jnp.float64)
 
     def metrics(model):
-        # `model` is one ModelParams row: scalar leaves + a (3,) op vector.
-        # The sram mode helpers read it via the same attribute names as a
-        # scalar EnergyModel, so both paths share one set of expressions.
+        # `model` is one ModelParams row: scalar or (T,) leaves + a (3,)
+        # or (T, 3) per-op vector.  The sram mode helpers read it via the
+        # same attribute names as a scalar EnergyModel, so both paths
+        # share one set of expressions.
         t_ns = cycles_f / model.f_clk_hz * 1e9
-        e_ops_fj = (tot * model.e_op_marginal_fj[None, :]).sum(axis=-1)
+        e_marg = model.e_op_marginal_fj
+        if e_marg.ndim == 2:  # (T, 3) correlated per-op energies
+            e_ops_fj = (tot[:, None, :] * e_marg[None, :, :]).sum(axis=-1)
+        else:
+            e_ops_fj = (tot * e_marg[None, :]).sum(axis=-1)
 
         if mode == "paper":
             p_mw = paper_power_mw(n_lvl, model) * jnp.ones_like(t_ns)
             e_nj = paper_energy_nj(p_mw, t_ns)
         elif mode == "physical":
             e_nj = physical_energy_nj(
-                t_ns, active, e_ops_fj[:, None], cols[None, :], model
+                t_ns, active,
+                e_ops_fj if e_ops_fj.ndim == 2 else e_ops_fj[:, None],
+                cols[None, :], model,
             )
             p_mw = jnp.where(t_ns > 0, e_nj / t_ns * 1e3, 0.0)
         else:
@@ -594,8 +623,43 @@ def _suite_grids():
 # ---------------------------------------------------------------------------
 
 
+_SCHED_KEYS = ("cycles", "active_macro_cycles", "fits")
+_METRIC_KEYS = (
+    "latency_ns", "energy_nj", "power_mw", "throughput_gops", "tops_per_watt"
+)
+# Grid fields that may hold device-resident (jax) arrays in lazy mode.
+_LAZY_FIELDS = frozenset(_SCHED_KEYS + _METRIC_KEYS)
+
+
+class _LazyArrays:
+    """Mixin for the grid dataclasses: metric/schedule fields may hold
+    *device* (jax) arrays instead of numpy — the lazy mode of the fused
+    pipeline.  A field is materialized to numpy on first attribute access
+    and cached in place (the dataclasses are frozen, so the swap goes
+    through ``object.__setattr__``), which means a grid that is never
+    inspected never pays the device->host transfer: the fused selection
+    already moved the winners across, and the full (C, V, T, R) tensors
+    stay where they were computed.
+
+    View methods (``grid``/``variation``/``suite``) slice through
+    ``_raw`` so child grids inherit the un-materialized device arrays —
+    slicing a jax array is a device op, not a transfer.
+    """
+
+    def __getattribute__(self, name):
+        val = object.__getattribute__(self, name)
+        if name in _LAZY_FIELDS and not isinstance(val, np.ndarray):
+            val = np.asarray(val)
+            object.__setattr__(self, name, val)
+        return val
+
+    def _raw(self, name: str):
+        """The stored array without materializing it (device or numpy)."""
+        return object.__getattribute__(self, name)
+
+
 @dataclasses.dataclass(frozen=True)
-class ExplorationGrid:
+class ExplorationGrid(_LazyArrays):
     """The full recipe x topology sweep as ``(n_topologies, n_recipes)``
     arrays — the batched analogue of ``ExplorationResult.evaluations``.
 
@@ -625,7 +689,8 @@ class ExplorationGrid:
 
     @property
     def size(self) -> int:
-        return self.energy_nj.size
+        # _raw: a shape query must not materialize a lazy device tensor
+        return self._raw("energy_nj").size
 
     def unravel(self, flat_index: int) -> tuple[int, int]:
         """Flat (topology-major) index -> (topology_idx, recipe_idx)."""
@@ -649,7 +714,7 @@ class ExplorationGrid:
 
 
 @dataclasses.dataclass(frozen=True)
-class VariationGrid:
+class VariationGrid(_LazyArrays):
     """One circuit's recipe x topology sweep across every `ModelTable`
     variant — the batched analogue of N `ExplorationGrid`s that cost one
     compile and one device call.
@@ -699,14 +764,14 @@ class VariationGrid:
         return ExplorationGrid(
             recipes=self.recipes,
             topologies=self.topologies,
-            cycles=self.cycles,
-            active_macro_cycles=self.active_macro_cycles,
-            fits=self.fits,
-            latency_ns=self.latency_ns[v],
-            energy_nj=self.energy_nj[v],
-            power_mw=self.power_mw[v],
-            throughput_gops=self.throughput_gops[v],
-            tops_per_watt=self.tops_per_watt[v],
+            cycles=self._raw("cycles"),
+            active_macro_cycles=self._raw("active_macro_cycles"),
+            fits=self._raw("fits"),
+            latency_ns=self._raw("latency_ns")[v],
+            energy_nj=self._raw("energy_nj")[v],
+            power_mw=self._raw("power_mw")[v],
+            throughput_gops=self._raw("throughput_gops")[v],
+            tops_per_watt=self._raw("tops_per_watt")[v],
             area_mm2=self.area_mm2[v],
             feasible=self.feasible,
             mode=self.mode,
@@ -759,46 +824,38 @@ def schedule_batch(
         )
 
 
-_SCHED_KEYS = ("cycles", "active_macro_cycles", "fits")
-_METRIC_KEYS = (
-    "latency_ns", "energy_nj", "power_mw", "throughput_gops", "tops_per_watt"
-)
-
-
-def evaluate_batch(
-    work: WorkloadTable,
-    topos: TopologyTable,
-    model: "EnergyModel | ModelTable | None" = None,
-    mode: str = "physical",
-    discipline: str = "list",
-    feasible: np.ndarray | None = None,
-) -> "ExplorationGrid | VariationGrid":
-    """Schedule + evaluate the full recipe x topology grid in one jitted
-    float64 pass; the batched ``sram.evaluate``.
-
-    ``model`` may be a single `EnergyModel` (returns an
-    `ExplorationGrid`, as before) or a `sram.ModelTable` of variants
-    (returns a `VariationGrid` with a leading variant axis).  Either way
-    the model constants are traced operands — the kernel never recompiles
-    on a model change, only on a new (grid shape, n_variants,
-    discipline, mode).
-    """
-    _, evaluate_grid = _grids()
-    table, is_sweep = _as_table(model)
-    _check_topo_axis(table, topos)
-    with enable_x64():
-        out = evaluate_grid(
-            work.ops, work.n_levels, topos.ops_per_cycle,
-            topos.macros_per_type, topos.is_single, topos.total_bits,
-            topos.cols, _model_params(table), discipline, mode,
-        )
-        sched = {k: np.asarray(out[k]).T for k in _SCHED_KEYS}
-        mets = {
-            k: np.swapaxes(np.asarray(out[k]), 1, 2) for k in _METRIC_KEYS
-        }
+def _grid_feasible(topos, feasible) -> np.ndarray:
     if feasible is None:
         feasible = np.ones(len(topos), dtype=bool)
-    feasible = np.asarray(feasible, dtype=bool)
+    return np.asarray(feasible, dtype=bool)
+
+
+def _layout_outputs(out, lazy):
+    """Kernel outputs ((..., R, T)-major) -> final (..., T, R) layout
+    schedule/metric dicts; ``lazy`` keeps them device-resident."""
+    conv = (lambda a: a) if lazy else np.asarray
+    return (
+        {k: conv(jnp.swapaxes(out[k], -1, -2)) for k in _SCHED_KEYS},
+        {k: conv(jnp.swapaxes(out[k], -1, -2)) for k in _METRIC_KEYS},
+    )
+
+
+def _fused_outputs(res, lazy):
+    """The fused kernels' schedule/metric dicts (already final-layout);
+    ``lazy`` keeps them device-resident."""
+    conv = (lambda a: a) if lazy else np.asarray
+    return (
+        {k: conv(res["sched"][k]) for k in _SCHED_KEYS},
+        {k: conv(res["mets"][k]) for k in _METRIC_KEYS},
+    )
+
+
+def _build_grid(
+    work, topos, table, model, is_sweep, mode, discipline, feasible,
+    sched, mets,
+) -> "ExplorationGrid | VariationGrid":
+    """Assemble the single-circuit grid result from (possibly
+    device-resident) schedule/metric arrays."""
     if not is_sweep:
         return ExplorationGrid(
             recipes=work.recipes,
@@ -824,13 +881,53 @@ def evaluate_batch(
     )
 
 
+def evaluate_batch(
+    work: WorkloadTable,
+    topos: TopologyTable,
+    model: "EnergyModel | ModelTable | None" = None,
+    mode: str = "physical",
+    discipline: str = "list",
+    feasible: np.ndarray | None = None,
+    lazy: bool = False,
+) -> "ExplorationGrid | VariationGrid":
+    """Schedule + evaluate the full recipe x topology grid in one jitted
+    float64 pass; the batched ``sram.evaluate``.
+
+    ``model`` may be a single `EnergyModel` (returns an
+    `ExplorationGrid`, as before) or a `sram.ModelTable` of variants
+    (returns a `VariationGrid` with a leading variant axis).  Either way
+    the model constants are traced operands — the kernel never recompiles
+    on a model change, only on a new (grid shape, n_variants,
+    discipline, mode).
+
+    ``lazy=True`` keeps the metric tensors device-resident: the grid's
+    array fields materialize to numpy on first access instead of paying
+    the device->host transfer eagerly (see `_LazyArrays`).
+    """
+    _, evaluate_grid = _grids()
+    table, is_sweep = _as_table(model)
+    _check_topo_axis(table, topos)
+    feasible = _grid_feasible(topos, feasible)
+    with enable_x64():
+        out = evaluate_grid(
+            work.ops, work.n_levels, topos.ops_per_cycle,
+            topos.macros_per_type, topos.is_single, topos.total_bits,
+            topos.cols, _model_params(table), discipline, mode,
+        )
+        sched, mets = _layout_outputs(out, lazy)
+        return _build_grid(
+            work, topos, table, model, is_sweep, mode, discipline,
+            feasible, sched, mets,
+        )
+
+
 # ---------------------------------------------------------------------------
 # Suite-level sweep: circuits x recipes x topologies in one jitted call
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
-class SuiteGrid:
+class SuiteGrid(_LazyArrays):
     """The whole-suite sweep as ``(n_circuits, n_topologies, n_recipes)``
     arrays — one `ExplorationGrid` per circuit, stacked.
 
@@ -860,7 +957,7 @@ class SuiteGrid:
     @property
     def size(self) -> int:
         """Total swept implementations (circuits x topologies x recipes)."""
-        return self.energy_nj.size
+        return self._raw("energy_nj").size
 
     def circuit_index(self, circuit: str | int) -> int:
         if isinstance(circuit, int):
@@ -873,14 +970,14 @@ class SuiteGrid:
         return ExplorationGrid(
             recipes=self.recipes,
             topologies=self.topologies,
-            cycles=self.cycles[c],
-            active_macro_cycles=self.active_macro_cycles[c],
-            fits=self.fits[c],
-            latency_ns=self.latency_ns[c],
-            energy_nj=self.energy_nj[c],
-            power_mw=self.power_mw[c],
-            throughput_gops=self.throughput_gops[c],
-            tops_per_watt=self.tops_per_watt[c],
+            cycles=self._raw("cycles")[c],
+            active_macro_cycles=self._raw("active_macro_cycles")[c],
+            fits=self._raw("fits")[c],
+            latency_ns=self._raw("latency_ns")[c],
+            energy_nj=self._raw("energy_nj")[c],
+            power_mw=self._raw("power_mw")[c],
+            throughput_gops=self._raw("throughput_gops")[c],
+            tops_per_watt=self._raw("tops_per_watt")[c],
             area_mm2=self.area_mm2,
             feasible=self.feasible[c],
             mode=self.mode,
@@ -915,7 +1012,7 @@ def schedule_suite(
 
 
 @dataclasses.dataclass(frozen=True)
-class SuiteVariationGrid:
+class SuiteVariationGrid(_LazyArrays):
     """The whole suite swept across every model variant: circuits x
     model-variants x topologies x recipes from ONE compile and ONE device
     call — the fourth (variant) axis of the rapid-assessment engine.
@@ -949,7 +1046,7 @@ class SuiteVariationGrid:
     @property
     def size(self) -> int:
         """Total swept implementations (C x V x T x R)."""
-        return self.energy_nj.size
+        return self._raw("energy_nj").size
 
     def circuit_index(self, circuit: str | int) -> int:
         if isinstance(circuit, int):
@@ -963,14 +1060,14 @@ class SuiteVariationGrid:
             recipes=self.recipes,
             topologies=self.topologies,
             models=self.models,
-            cycles=self.cycles[c],
-            active_macro_cycles=self.active_macro_cycles[c],
-            fits=self.fits[c],
-            latency_ns=self.latency_ns[c],
-            energy_nj=self.energy_nj[c],
-            power_mw=self.power_mw[c],
-            throughput_gops=self.throughput_gops[c],
-            tops_per_watt=self.tops_per_watt[c],
+            cycles=self._raw("cycles")[c],
+            active_macro_cycles=self._raw("active_macro_cycles")[c],
+            fits=self._raw("fits")[c],
+            latency_ns=self._raw("latency_ns")[c],
+            energy_nj=self._raw("energy_nj")[c],
+            power_mw=self._raw("power_mw")[c],
+            throughput_gops=self._raw("throughput_gops")[c],
+            tops_per_watt=self._raw("tops_per_watt")[c],
             area_mm2=self.area_mm2,
             feasible=self.feasible[c],
             mode=self.mode,
@@ -985,14 +1082,14 @@ class SuiteVariationGrid:
             circuits=self.circuits,
             recipes=self.recipes,
             topologies=self.topologies,
-            cycles=self.cycles,
-            active_macro_cycles=self.active_macro_cycles,
-            fits=self.fits,
-            latency_ns=self.latency_ns[:, v],
-            energy_nj=self.energy_nj[:, v],
-            power_mw=self.power_mw[:, v],
-            throughput_gops=self.throughput_gops[:, v],
-            tops_per_watt=self.tops_per_watt[:, v],
+            cycles=self._raw("cycles"),
+            active_macro_cycles=self._raw("active_macro_cycles"),
+            fits=self._raw("fits"),
+            latency_ns=self._raw("latency_ns")[:, v],
+            energy_nj=self._raw("energy_nj")[:, v],
+            power_mw=self._raw("power_mw")[:, v],
+            throughput_gops=self._raw("throughput_gops")[:, v],
+            tops_per_watt=self._raw("tops_per_watt")[:, v],
             area_mm2=self.area_mm2[v],
             feasible=self.feasible,
             mode=self.mode,
@@ -1020,42 +1117,7 @@ class SuiteVariationGrid:
         )
 
 
-def evaluate_suite(
-    suite: SuiteTable,
-    topos: TopologyTable,
-    model: "EnergyModel | ModelTable | None" = None,
-    mode: str = "physical",
-    discipline: str = "list",
-    feasible: np.ndarray | None = None,
-) -> "SuiteGrid | SuiteVariationGrid":
-    """Schedule + evaluate circuits x recipes x topologies in one jitted
-    float64 pass — the suite-level `evaluate_batch`.
-
-    ``model`` may be a single `EnergyModel` (returns a `SuiteGrid`) or a
-    `sram.ModelTable` (returns a `SuiteVariationGrid` with a leading
-    variant axis on every metric): the model constants are traced
-    operands, so the whole circuits x variants x topologies x recipes
-    hypercube is one compile and one device call.
-
-    ``feasible``: optional ``(n_circuits, n_topologies)`` bool mask of
-    capacity-feasible topologies per circuit (Alg. I line 9); defaults to
-    all-feasible, as in `evaluate_batch`.
-    """
-    _, evaluate = _suite_grids()
-    table, is_sweep = _as_table(model)
-    _check_topo_axis(table, topos)
-    with enable_x64():
-        out = evaluate(
-            suite.ops, suite.n_levels, topos.ops_per_cycle,
-            topos.macros_per_type, topos.is_single, topos.total_bits,
-            topos.cols, _model_params(table), discipline, mode,
-        )
-        sched = {
-            k: np.swapaxes(np.asarray(out[k]), 1, 2) for k in _SCHED_KEYS
-        }
-        mets = {
-            k: np.swapaxes(np.asarray(out[k]), 2, 3) for k in _METRIC_KEYS
-        }
+def _suite_feasible(suite, topos, feasible) -> np.ndarray:
     if feasible is None:
         feasible = np.ones((len(suite), len(topos)), dtype=bool)
     feasible = np.asarray(feasible, dtype=bool)
@@ -1064,6 +1126,15 @@ def evaluate_suite(
             f"feasible must be (n_circuits, n_topologies)="
             f"{(len(suite), len(topos))}, got {feasible.shape}"
         )
+    return feasible
+
+
+def _build_suite_grid(
+    suite, topos, table, model, is_sweep, mode, discipline, feasible,
+    sched, mets,
+) -> "SuiteGrid | SuiteVariationGrid":
+    """Assemble the suite grid result from (possibly device-resident)
+    schedule/metric arrays."""
     if not is_sweep:
         return SuiteGrid(
             circuits=suite.circuits,
@@ -1089,6 +1160,432 @@ def evaluate_suite(
         **sched,
         **mets,
     )
+
+
+def evaluate_suite(
+    suite: SuiteTable,
+    topos: TopologyTable,
+    model: "EnergyModel | ModelTable | None" = None,
+    mode: str = "physical",
+    discipline: str = "list",
+    feasible: np.ndarray | None = None,
+    lazy: bool = False,
+) -> "SuiteGrid | SuiteVariationGrid":
+    """Schedule + evaluate circuits x recipes x topologies in one jitted
+    float64 pass — the suite-level `evaluate_batch`.
+
+    ``model`` may be a single `EnergyModel` (returns a `SuiteGrid`) or a
+    `sram.ModelTable` (returns a `SuiteVariationGrid` with a leading
+    variant axis on every metric): the model constants are traced
+    operands, so the whole circuits x variants x topologies x recipes
+    hypercube is one compile and one device call.
+
+    ``feasible``: optional ``(n_circuits, n_topologies)`` bool mask of
+    capacity-feasible topologies per circuit (Alg. I line 9); defaults to
+    all-feasible, as in `evaluate_batch`.
+
+    ``lazy=True`` keeps the metric tensors device-resident (materialized
+    to numpy on first access — see `_LazyArrays`).
+    """
+    _, evaluate = _suite_grids()
+    table, is_sweep = _as_table(model)
+    _check_topo_axis(table, topos)
+    feasible = _suite_feasible(suite, topos, feasible)
+    with enable_x64():
+        out = evaluate(
+            suite.ops, suite.n_levels, topos.ops_per_cycle,
+            topos.macros_per_type, topos.is_single, topos.total_bits,
+            topos.cols, _model_params(table), discipline, mode,
+        )
+        sched, mets = _layout_outputs(out, lazy)
+        return _build_suite_grid(
+            suite, topos, table, model, is_sweep, mode, discipline,
+            feasible, sched, mets,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Device-resident pipeline: fused evaluate + select, variant sharding
+# ---------------------------------------------------------------------------
+#
+# The host-side `select_best_batch` below pulls the full (C, V, T, R)
+# metric tensors off the device and reduces them to (C, V) winner
+# indices — for a large Monte-Carlo sweep the dominant cost is the
+# device->host transfer of data that is immediately thrown away.  The
+# fused kernels run the same three-tier masked argmin *inside* the
+# jitted evaluate pass, so only the winners + per-winner metrics cross
+# the host boundary; the full tensors stay device-resident and back the
+# lazy grids.  `select_best_batch` remains the parity reference the
+# tests check the fused winners against.
+
+
+def _select_core(energy, fits, feasible, latency, max_latency, use_latency):
+    """`select_best_batch`'s three-tier masking as pure jnp ops.
+
+    ``energy``/``latency`` are ``(..., V, N)``; ``fits``/``feasible``
+    are model-free ``(..., 1, N)`` masks broadcast across the variant
+    axis.  ``use_latency`` is a trace-time static (presence of the
+    latency tier changes the graph); ``max_latency`` itself is traced so
+    changing the bound never recompiles.  Returns per-cell winner
+    indices and a per-cell any-finite flag (the all-non-finite error is
+    raised host-side — the flag is part of the small payload).
+    """
+    finite = jnp.isfinite(energy)
+    tier2 = fits & finite
+    tier1 = tier2 & feasible
+    if use_latency:
+        tier1 = tier1 & (latency <= max_latency)
+    idx = _masked_tier_argmin(energy, (tier1, tier2, finite), xp=jnp)
+    return idx, finite.any(axis=-1)
+
+
+def _fused_tail(out, feasible, max_latency, use_latency):
+    """Select + gather appended to the evaluate kernels, rank-generic:
+    ``out`` metrics are ``(V, R, T)`` (single circuit) or ``(C, V, R, T)``
+    (suite); ``feasible`` is ``(T,)`` / ``(C, T)``.
+
+    Returns the final-layout schedule/metric tensors (these stay on
+    device for the lazy grids) plus the small selection payload: winner
+    indices, per-winner metrics, each variant's latency and the capacity
+    flag at the *nominal* (variant-0) winner cell — everything the yield
+    summary needs without touching the full tensors.
+    """
+    sched = {k: jnp.swapaxes(out[k], -1, -2) for k in _SCHED_KEYS}
+    mets = {k: jnp.swapaxes(out[k], -1, -2) for k in _METRIC_KEYS}
+    fits = sched["fits"]                              # (..., T, R)
+    n = fits.shape[-2] * fits.shape[-1]
+
+    def flat(m):  # (..., T, R) -> (..., T*R), flat topology-major
+        return m.reshape(m.shape[:-2] + (n,))
+
+    energy, latency = flat(mets["energy_nj"]), flat(mets["latency_ns"])
+    fits_f = flat(fits)[..., None, :]                 # (..., 1, N)
+    feas = jnp.broadcast_to(feasible[..., :, None], fits.shape)
+    feas_f = flat(feas)[..., None, :]
+    idx, has_finite = _select_core(
+        energy, fits_f, feas_f, latency, max_latency, use_latency
+    )                                                 # (..., V)
+
+    def take(m):  # metric value at each cell's winner
+        return jnp.take_along_axis(flat(m), idx[..., None], axis=-1)[..., 0]
+
+    winner_mets = {k: take(mets[k]) for k in _METRIC_KEYS}
+    # Each variant's latency / the capacity flag at the variant-0 winner.
+    idx0 = idx[..., :1]
+    nominal_latency = jnp.take_along_axis(
+        latency, jnp.broadcast_to(idx0[..., None], idx.shape + (1,)), axis=-1
+    )[..., 0]
+    nominal_fits = jnp.take_along_axis(flat(fits), idx0, axis=-1)[..., 0]
+    return dict(
+        sched=sched,
+        mets=mets,
+        winner_idx=idx.astype(jnp.int32),
+        has_finite=has_finite,
+        winner_mets=winner_mets,
+        nominal_latency=nominal_latency,
+        nominal_fits=nominal_fits,
+    )
+
+
+def _jit_fused(fn):
+    # Donate the per-variant model operands: they are consumed by the
+    # kernel and never reused, so on accelerator backends XLA may alias
+    # their buffers into the outputs.  CPU cannot use donated buffers
+    # (jax would warn on every call), so the gate is per-backend.
+    donate = () if jax.default_backend() == "cpu" else ("params",)
+    return jax.jit(
+        fn,
+        static_argnames=("discipline", "mode", "use_latency"),
+        donate_argnames=donate,
+    )
+
+
+def _make_fused_grid():
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
+           params, feasible, max_latency, discipline, mode, use_latency):
+        TRACE_COUNTS["fused_grid"] += 1
+        out = _evaluate_core(
+            ops, n_levels, width, mpt, is_single, total_bits, cols,
+            params, discipline, mode,
+        )
+        return _fused_tail(out, feasible, max_latency, use_latency)
+
+    return _jit_fused(fn)
+
+
+def _make_fused_suite():
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
+           params, feasible, max_latency, discipline, mode, use_latency):
+        TRACE_COUNTS["fused_suite"] += 1
+
+        def per_circuit(o, nl):
+            return _evaluate_core(
+                o, nl, width, mpt, is_single, total_bits, cols,
+                params, discipline, mode,
+            )
+
+        out = jax.vmap(per_circuit)(ops, n_levels)
+        return _fused_tail(out, feasible, max_latency, use_latency)
+
+    return _jit_fused(fn)
+
+
+_FUSED_GRID = None
+_FUSED_SUITE = None
+
+
+def _fused_kernels():
+    global _FUSED_GRID, _FUSED_SUITE
+    _load_jax()
+    if _FUSED_GRID is None:
+        _FUSED_GRID = _make_fused_grid()
+        _FUSED_SUITE = _make_fused_suite()
+    return _FUSED_GRID, _FUSED_SUITE
+
+
+def _shard_variants(
+    params: ModelParams, shard: "bool | None"
+) -> tuple[ModelParams, bool]:
+    """Lay the per-variant model operands out across the available
+    devices.  The variant axis is embarrassingly parallel (each variant
+    reads the same schedule), so a `NamedSharding` over the leading axis
+    of every `ModelParams` leaf is enough for XLA's GSPMD partitioner to
+    shard the whole fused evaluate+select kernel along it.
+
+    ``shard=None`` (auto): shard when more than one device is visible
+    and the variant count divides evenly; ``False``: never; ``True``:
+    force a mesh even on one device (a 1-device mesh is bit-identical to
+    the unsharded path — the sharded-equals-unsharded contract the tests
+    pin).  Indivisible variant counts fall back to fewer devices (worst
+    case 1) rather than padding, keeping results exact.
+    """
+    if shard is False:
+        return params, False
+    devs = jax.devices()
+    n = len(devs)
+    if shard is None and n == 1:
+        return params, False
+    v = int(np.shape(params.f_clk_hz)[0])
+    while n > 1 and v % n:
+        n -= 1
+    if shard is None and n == 1:
+        return params, False
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    mesh = Mesh(np.asarray(devs[:n]), ("variants",))
+    spec = NamedSharding(mesh, PartitionSpec("variants"))
+    return jax.device_put(params, spec), True
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionResult:
+    """What the fused pipeline brings back across the host boundary: the
+    winners of every (circuit, variant) cell plus their metrics — a few
+    KB where the host-side filter transferred the full float64
+    (C, V, T, R) tensors.
+
+    ``winner_idx`` holds flat topology-major indices (``grid.unravel``
+    decodes them), shaped ``(V,)`` for a single-circuit sweep and
+    ``(C, V)`` for a suite (V=1 when a single `EnergyModel` was
+    evaluated).  ``nominal_latency_ns`` / ``nominal_fits`` are each
+    variant's latency / the capacity flag at the *nominal* (variant-0)
+    winner cell — the inputs of the latency-yield figure.
+    ``payload_bytes`` is the actual number of bytes materialized to
+    host for this result.
+    """
+
+    winner_idx: np.ndarray            # (V,) or (C, V) int32
+    winner_metrics: dict[str, np.ndarray]  # each (V,) or (C, V) float64
+    nominal_latency_ns: np.ndarray    # (V,) or (C, V)
+    nominal_fits: np.ndarray          # () or (C,) bool
+    payload_bytes: int
+    sharded: bool
+
+    @property
+    def winner_energy_nj(self) -> np.ndarray:
+        return self.winner_metrics["energy_nj"]
+
+
+def _fetch_selection(res, sharded: bool) -> SelectionResult:
+    """Materialize the small selection payload (this is the only
+    device->host transfer of the fused path) and apply the host-side
+    all-non-finite check that `select_best_batch` raises eagerly."""
+    has_finite = np.asarray(res["has_finite"])
+    if not has_finite.all():
+        raise ValueError(
+            "fused selection: a batch cell has no finite energies"
+        )
+    winner_idx = np.asarray(res["winner_idx"])
+    winner_mets = {k: np.asarray(v) for k, v in res["winner_mets"].items()}
+    nominal_latency = np.asarray(res["nominal_latency"])
+    nominal_fits = np.asarray(res["nominal_fits"])
+    payload = (
+        winner_idx.nbytes
+        + has_finite.nbytes
+        + nominal_latency.nbytes
+        + nominal_fits.nbytes
+        + sum(v.nbytes for v in winner_mets.values())
+    )
+    return SelectionResult(
+        winner_idx=winner_idx,
+        winner_metrics=winner_mets,
+        nominal_latency_ns=nominal_latency,
+        nominal_fits=nominal_fits,
+        payload_bytes=payload,
+        sharded=sharded,
+    )
+
+
+def evaluate_select_batch(
+    work: WorkloadTable,
+    topos: TopologyTable,
+    model: "EnergyModel | ModelTable | None" = None,
+    mode: str = "physical",
+    discipline: str = "list",
+    feasible: np.ndarray | None = None,
+    max_latency_ns: float | None = None,
+    lazy: bool = True,
+    shard: "bool | None" = None,
+) -> "tuple[ExplorationGrid | VariationGrid, SelectionResult]":
+    """`evaluate_batch` with the FilterEnergy stage fused into the same
+    jitted pass: schedule, evaluate, and the three-tier masked argmin run
+    on device, and only the (V,) winner indices + per-winner metrics are
+    transferred.  The grid is returned lazy by default — its full metric
+    tensors stay device-resident until (unless) someone reads them.
+
+    ``shard`` controls multi-device execution of the variant axis (see
+    `_shard_variants`); the single-device path is bit-identical to
+    `evaluate_batch` + `select_best_batch`.
+    """
+    fused_grid, _ = _fused_kernels()
+    table, is_sweep = _as_table(model)
+    _check_topo_axis(table, topos)
+    feasible = _grid_feasible(topos, feasible)
+    use_latency = max_latency_ns is not None
+    with enable_x64():
+        params, sharded = _shard_variants(_model_params(table), shard)
+        res = fused_grid(
+            work.ops, work.n_levels, topos.ops_per_cycle,
+            topos.macros_per_type, topos.is_single, topos.total_bits,
+            topos.cols, params, feasible,
+            np.float64(max_latency_ns if use_latency else 0.0),
+            discipline, mode, use_latency,
+        )
+        sel = _fetch_selection(res, sharded)
+        sched, mets = _fused_outputs(res, lazy)
+        grid = _build_grid(
+            work, topos, table, model, is_sweep, mode, discipline,
+            feasible, sched, mets,
+        )
+    return grid, sel
+
+
+def evaluate_select_suite(
+    suite: SuiteTable,
+    topos: TopologyTable,
+    model: "EnergyModel | ModelTable | None" = None,
+    mode: str = "physical",
+    discipline: str = "list",
+    feasible: np.ndarray | None = None,
+    max_latency_ns: float | None = None,
+    lazy: bool = True,
+    shard: "bool | None" = None,
+) -> "tuple[SuiteGrid | SuiteVariationGrid, SelectionResult]":
+    """The suite-level fused pipeline: circuits x variants x topologies x
+    recipes evaluated AND filtered in one jitted device call.  Only the
+    ``(C, V)`` winner indices + per-winner metrics cross the host
+    boundary; the full metric tensors back the returned lazy grid and
+    are materialized only on access.
+
+    Winner parity with the host path (`evaluate_suite` +
+    `SuiteVariationGrid.best_indices`) is exact — same tiering, same
+    lowest-flat-index tie-breaking, same all-non-finite error — and is
+    pinned by tests/test_fused.py.
+    """
+    _, fused_suite = _fused_kernels()
+    table, is_sweep = _as_table(model)
+    _check_topo_axis(table, topos)
+    feasible = _suite_feasible(suite, topos, feasible)
+    use_latency = max_latency_ns is not None
+    with enable_x64():
+        params, sharded = _shard_variants(_model_params(table), shard)
+        res = fused_suite(
+            suite.ops, suite.n_levels, topos.ops_per_cycle,
+            topos.macros_per_type, topos.is_single, topos.total_bits,
+            topos.cols, params, feasible,
+            np.float64(max_latency_ns if use_latency else 0.0),
+            discipline, mode, use_latency,
+        )
+        sel = _fetch_selection(res, sharded)
+        sched, mets = _fused_outputs(res, lazy)
+        grid = _build_suite_grid(
+            suite, topos, table, model, is_sweep, mode, discipline,
+            feasible, sched, mets,
+        )
+    return grid, sel
+
+
+_SELECT_BATCH = None
+
+
+def _make_select_batch():
+    def fn(energy, fits, feasible, latency, max_latency, use_latency):
+        TRACE_COUNTS["select_batch"] += 1
+        return _select_core(
+            energy, fits, feasible, latency, max_latency, use_latency
+        )
+
+    return jax.jit(fn, static_argnames=("use_latency",))
+
+
+def select_best_batch_device(
+    energy,
+    fits,
+    latency=None,
+    max_latency: float | None = None,
+    feasible=None,
+) -> np.ndarray:
+    """`select_best_batch` with the three-tier argmin run as a jitted
+    device reduction — the standalone fused filter for callers whose
+    metrics are already arrays (the mesh explorer's constant sweeps).
+
+    Same semantics as the host version: tiering, lowest-flat-index
+    tie-breaking, non-finite energies inadmissible everywhere, ValueError
+    on an empty grid or an all-non-finite batch cell.  Absent
+    latency/feasible constraints are passed as dummies that drop out of
+    the masking algebra (``fits`` as feasible leaves tier 1 == tier 2),
+    so only toggling the latency tier — not any operand value —
+    retraces.
+    """
+    global _SELECT_BATCH
+    _load_jax()
+    if _SELECT_BATCH is None:
+        _SELECT_BATCH = _make_select_batch()
+    energy = np.asarray(energy, dtype=np.float64)
+    if energy.size == 0 or energy.shape[-1] == 0:
+        raise ValueError("select_best_batch on an empty grid")
+    fits = np.asarray(fits, dtype=bool)
+    use_latency = max_latency is not None and latency is not None
+    with enable_x64():
+        idx, has_finite = _SELECT_BATCH(
+            energy,
+            fits,
+            np.asarray(feasible, dtype=bool) if feasible is not None else fits,
+            # scalar dummy: the use_latency=False graph never reads it,
+            # and a scalar avoids shipping the energy array twice
+            np.asarray(latency, dtype=np.float64)
+            if use_latency
+            else np.float64(0.0),
+            np.float64(max_latency if use_latency else 0.0),
+            use_latency,
+        )
+        idx = np.asarray(idx, dtype=np.int64)
+        has_finite = np.asarray(has_finite)
+    if not has_finite.all():
+        raise ValueError(
+            "select_best_batch: a batch cell has no finite energies"
+        )
+    return idx
 
 
 # ---------------------------------------------------------------------------
@@ -1275,9 +1772,13 @@ def table2_batch(
     w = topos.ops_per_cycle.astype(float) * topos.n_macros
     if isinstance(model, ModelTable):
         _check_topo_axis(model, topos)
+        e3 = model.e_op_fj  # (V, 3) -> (V, 1) columns; (V, T, 3) -> (V, T)
         shim = _BroadcastModel(
             f_clk_hz=_per_topo(model.f_clk_hz),
-            e_op_fj=tuple(model.e_op_fj[:, k: k + 1] for k in range(3)),
+            e_op_fj=tuple(
+                (e3[:, :, k] if e3.ndim == 3 else e3[:, k: k + 1])
+                for k in range(3)
+            ),
             p_ctrl_mw=_per_topo(model.p_ctrl_mw),
             pipeline_utilization=_per_topo(model.pipeline_utilization),
         )

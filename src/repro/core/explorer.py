@@ -48,11 +48,14 @@ import numpy as np
 from .aig import Aig, AigStats
 from .batch import (
     ExplorationGrid,
+    SelectionResult,
     SuiteTable,
     TopologyTable,
     VariationGrid,
     WorkloadTable,
     evaluate_batch,
+    evaluate_select_batch,
+    evaluate_select_suite,
     evaluate_suite,
     winner_summary,
 )
@@ -82,6 +85,11 @@ class Evaluation:
     metrics: Metrics
 
 
+#: Quantiles reported by `VariationResult.energy_quantiles` — median plus
+#: the quartiles and the 5%/95% tails of the per-variant winner energy.
+ENERGY_QUANTILES = (0.05, 0.25, 0.5, 0.75, 0.95)
+
+
 @dataclasses.dataclass
 class VariationResult:
     """Yield-style summary of a model-variant sweep for one circuit.
@@ -89,6 +97,10 @@ class VariationResult:
     Variant 0 of ``models`` is the nominal model (the `ModelTable`
     generators' convention); the yield figures measure how robust the
     nominal pick is across the other variants — the paper's fourth FoM.
+    For large-N Monte-Carlo sweeps the winner shares alone hide the
+    distribution tails, so the per-variant winner energy is summarized
+    as quantiles (``energy_quantiles``) and as conditional
+    value-at-risk (`cvar`).
     """
 
     models: ModelTable
@@ -98,10 +110,25 @@ class VariationResult:
     best_yield: float    # fraction of variants where the nominal winner stays best
     latency_yield: float  # fraction where the nominal winner fits + meets
     #                       the latency constraint under that variant's clock
+    winner_energy_nj: np.ndarray     # (V,) each variant's winning energy
+    energy_quantiles: dict[float, float]  # ENERGY_QUANTILES of the above
 
     @property
     def n_variants(self) -> int:
         return len(self.models)
+
+    def cvar(self, alpha: float = 0.9) -> float:
+        """Conditional value-at-risk (expected shortfall) of the
+        per-variant winner energy: the mean over the worst
+        (highest-energy) ``1 - alpha`` tail of variants.  ``cvar(0.9)``
+        answers "when silicon lands in the bad 10% of the model
+        distribution, what energy do we expect?" — a tail figure winner
+        shares cannot express."""
+        if not 0.0 <= alpha < 1.0:
+            raise ValueError(f"alpha must be in [0, 1), got {alpha}")
+        e = np.sort(self.winner_energy_nj)
+        k = max(1, int(np.ceil((1.0 - alpha) * e.size)))
+        return float(e[-k:].mean())
 
 
 @dataclasses.dataclass
@@ -243,6 +270,7 @@ def explore(
     cha: Mapping[tuple[str, ...], AigStats] | None = None,
     cache: "CharacterizationCache | str | os.PathLike | None" = None,
     n_jobs: int | None = 1,
+    fused: bool = True,
 ) -> ExplorationResult:
     """Algorithm I for one circuit.
 
@@ -268,6 +296,10 @@ def explore(
         cache: persistent characterization cache (path or
             `CharacterizationCache`) consulted when ``cha`` is None.
         n_jobs: process-pool width for characterization (1 = serial).
+        fused: with ``backend="jax"``, run FilterEnergy on device in the
+            same jitted pass (`batch.evaluate_select_batch`) so only the
+            winner crosses the host boundary and the grid stays lazy;
+            ``False`` keeps the host-side `select_best` path.
 
     Returns:
         `ExplorationResult`: the min-energy admissible implementation
@@ -320,17 +352,25 @@ def explore(
     else:
         work = WorkloadTable.from_stats([(r, cha[r]) for r in sweep_recipes])
         topo_table = TopologyTable.from_topologies(sweep_topos)
-        grid = evaluate_batch(
-            work,
-            topo_table,
-            model,
-            mode=mode,
-            discipline=discipline,
-            feasible=np.array([t in feasible for t in sweep_topos], dtype=bool),
-        )
+        feas = np.array([t in feasible for t in sweep_topos], dtype=bool)
+        if fused:
+            # Device-resident back half: evaluate + FilterEnergy in one
+            # jitted pass; only the winner index leaves the device and
+            # the grid materializes lazily if anyone reads it.
+            grid, sel = evaluate_select_batch(
+                work, topo_table, model, mode=mode, discipline=discipline,
+                feasible=feas, max_latency_ns=max_latency_ns, lazy=True,
+            )
+            best_flat = int(sel.winner_idx[0])  # V=1: one winner
+        else:
+            grid = evaluate_batch(
+                work, topo_table, model, mode=mode, discipline=discipline,
+                feasible=feas,
+            )
+            best_flat = grid.best_index(max_latency_ns)
         # Line 14 on the grid; re-materialize the winner through the scalar
         # model so `best` is exactly the object the python backend returns.
-        ti, ri = grid.unravel(grid.best_index(max_latency_ns))
+        ti, ri = grid.unravel(best_flat)
         best = _materialize(
             sweep_recipes[ri], sweep_topos[ti], cha[sweep_recipes[ri]],
             model, mode, discipline,
@@ -358,12 +398,20 @@ def _variation_result(
     vgrid: VariationGrid,
     max_latency_ns: float | None,
     idx: np.ndarray | None = None,
+    winner_energy: np.ndarray | None = None,
+    nominal_latency: np.ndarray | None = None,
+    nominal_fits: "bool | None" = None,
 ) -> VariationResult:
     """Per-variant winners + yield summary for one circuit's sweep.
 
-    ``idx``: precomputed ``(V,)`` winner indices — `explore_suite` passes
-    one row of the suite-wide `SuiteVariationGrid.best_indices` pass so
-    the whole (C, V) selection stage is a single batched array pass."""
+    ``idx``: precomputed ``(V,)`` winner indices.  The fused pipeline
+    passes one row of the on-device `SelectionResult` — together with
+    its per-winner energies (``winner_energy``) and the nominal-winner
+    latencies/fits (``nominal_latency``/``nominal_fits``) the whole
+    summary is computed without touching the full (V, T, R) tensors,
+    which then stay device-resident.  Callers without a fused result
+    (host fallback) omit them and the summary is derived from the grid.
+    """
     if idx is None:
         idx = vgrid.best_indices(max_latency_ns)
     pairs = [vgrid.unravel(int(i)) for i in idx]
@@ -375,9 +423,20 @@ def _variation_result(
     # variant?  Capacity is model-free; latency shifts with each
     # variant's achievable clock.
     ti0, ri0 = pairs[0]
-    ok = np.full(len(idx), bool(vgrid.fits[ti0, ri0]))
+    if nominal_fits is None:
+        nominal_fits = bool(vgrid.fits[ti0, ri0])
+    ok = np.full(len(idx), bool(nominal_fits))
     if max_latency_ns is not None:
-        ok &= vgrid.latency_ns[:, ti0, ri0] <= max_latency_ns
+        if nominal_latency is None:
+            nominal_latency = vgrid.latency_ns[:, ti0, ri0]
+        ok &= np.asarray(nominal_latency) <= max_latency_ns
+    if winner_energy is None:
+        flat = vgrid.energy_nj.reshape(len(idx), -1)
+        winner_energy = flat[np.arange(len(idx)), np.asarray(idx)]
+    winner_energy = np.asarray(winner_energy, dtype=float)
+    quantiles = {
+        q: float(np.quantile(winner_energy, q)) for q in ENERGY_QUANTILES
+    }
     return VariationResult(
         models=vgrid.models,
         grid=vgrid,
@@ -385,6 +444,8 @@ def _variation_result(
         winner_share=share,
         best_yield=best_yield,
         latency_yield=float(np.mean(ok)),
+        winner_energy_nj=winner_energy,
+        energy_quantiles=quantiles,
     )
 
 
@@ -401,6 +462,8 @@ def explore_suite(
     cache: "CharacterizationCache | str | os.PathLike | None" = None,
     n_jobs: int | None = None,
     model_sweep: ModelTable | None = None,
+    fused: bool = True,
+    shard: "bool | None" = None,
 ) -> dict[str, ExplorationResult]:
     """Algorithm I over a whole benchmark suite in two device-sized steps.
 
@@ -428,6 +491,15 @@ def explore_suite(
     headline ``best``/``grid`` stay the nominal variant's, so downstream
     consumers are unchanged.  Mutually exclusive with ``model``;
     requires ``backend="jax"``.
+
+    ``fused`` (default): the whole back half is device-resident — the
+    three-tier FilterEnergy runs inside the same jitted pass
+    (`batch.evaluate_select_suite`), only the (C, V) winner indices +
+    per-winner metrics cross the host boundary, and each result's
+    ``grid`` is a lazy view whose tensors materialize on first access.
+    ``fused=False`` keeps the host-side `select_best_batch` path (the
+    parity reference).  ``shard`` spreads the variant axis over the
+    available devices (see `batch._shard_variants`; None = auto).
 
     Returns ``{circuit: ExplorationResult}`` in the input's order; each
     result's ``wall_s`` is the suite wall time divided evenly across
@@ -473,15 +545,30 @@ def explore_suite(
 
     suite = SuiteTable.from_cha(cha)
     topo_table = TopologyTable.from_topologies(sram_list)
-    sg = evaluate_suite(
-        suite, topo_table, model_sweep if model_sweep is not None else model,
-        mode=mode, discipline=discipline, feasible=feas_mask,
-    )
+    swept = model_sweep if model_sweep is not None else model
+    sel: SelectionResult | None = None
+    if fused:
+        # Device-resident back half: evaluate + FilterEnergy fused into
+        # one jitted (optionally variant-sharded) pass — only (C, V)
+        # winner indices + per-winner metrics are transferred, and the
+        # grids below are lazy device views.
+        sg, sel = evaluate_select_suite(
+            suite, topo_table, swept, mode=mode, discipline=discipline,
+            feasible=feas_mask, max_latency_ns=max_latency_ns, lazy=True,
+            shard=shard,
+        )
+    else:
+        sg = evaluate_suite(
+            suite, topo_table, swept,
+            mode=mode, discipline=discipline, feasible=feas_mask,
+        )
 
     out = {}
     wall = (time.time() - t0) / max(1, len(names))
-    if model_sweep is not None:
-        # Selection stage for the whole hypercube: every (circuit,
+    if sel is not None:
+        suite_winners = sel.winner_idx  # (C, V) — computed on device
+    elif model_sweep is not None:
+        # Host selection stage for the whole hypercube: every (circuit,
         # variant) winner from ONE batched masked-argmin pass.
         suite_winners = sg.best_indices(max_latency_ns)  # (C, V)
     for i, name in enumerate(names):
@@ -489,12 +576,24 @@ def explore_suite(
         if model_sweep is not None:
             vgrid = sg.variation(name)
             variation = _variation_result(
-                vgrid, max_latency_ns, idx=suite_winners[i]
+                vgrid, max_latency_ns, idx=suite_winners[i],
+                winner_energy=(
+                    None if sel is None else sel.winner_energy_nj[i]
+                ),
+                nominal_latency=(
+                    None if sel is None else sel.nominal_latency_ns[i]
+                ),
+                nominal_fits=(
+                    None if sel is None else bool(sel.nominal_fits[i])
+                ),
             )
             grid = vgrid.grid(0)  # nominal variant, the headline result
             # the batched pass already holds variant 0's winner under
             # the same tiers — no per-circuit re-selection needed
             best_flat = int(suite_winners[i, 0])
+        elif sel is not None:
+            grid = sg.grid(name)
+            best_flat = int(sel.winner_idx[i, 0])  # V=1 hypercube
         else:
             grid = sg.grid(name)
             best_flat = grid.best_index(max_latency_ns)

@@ -287,13 +287,15 @@ class ModelTable:
 
     Every `EnergyModel` float field becomes a float64 array with a
     leading variant axis: ``(V,)`` for scalars, ``(V, 3)`` for the per-op
-    tuples.  Scalar fields may additionally carry a trailing
-    **per-topology axis** — ``(V, T)`` — for *correlated* (topology-
-    dependent) variation, e.g. `bitcell_sigma_per_macro`'s per-macro-
+    tuples.  Fields may additionally carry a **per-topology axis** for
+    *correlated* (topology-dependent) variation — ``(V, T)`` for scalars
+    and ``(V, T, 3)`` for the per-op tuples (e.g. per-macro-geometry NOR
+    discharge energy), as in `bitcell_sigma_per_macro`'s per-macro-
     geometry mismatch: the batched kernels broadcast such fields along
     the grid's topology axis, so variant ``v`` applies a different
-    constant to each topology.  A ``(V, 1)`` field broadcasts uniformly
-    and is bit-identical to the same values as a ``(V,)`` field.
+    constant to each topology.  A ``(V, 1)`` / ``(V, 1, 3)`` field
+    broadcasts uniformly and is bit-identical to the same values as a
+    ``(V,)`` / ``(V, 3)`` field.
 
     The batched kernels (`batch.evaluate_batch` /
     `batch.evaluate_suite`) take these arrays as *traced* operands and
@@ -308,8 +310,8 @@ class ModelTable:
 
     names: tuple[str, ...]
     f_clk_hz: np.ndarray                  # (V,) or (V, T)
-    e_op_fj: np.ndarray                   # (V, 3)
-    e_op_marginal_fj: np.ndarray          # (V, 3)
+    e_op_fj: np.ndarray                   # (V, 3) or (V, T, 3)
+    e_op_marginal_fj: np.ndarray          # (V, 3) or (V, T, 3)
     writeback_fj_nonresonant: np.ndarray  # (V,) or (V, T)
     resonance_recycle_eta: np.ndarray     # (V,) or (V, T)
     p_ctrl_mw: np.ndarray                 # (V,) or (V, T)
@@ -338,11 +340,19 @@ class ModelTable:
                     f"field {f.name} has {arr.shape[0]} rows, expected {v}"
                 )
             if f.name in _PER_OP_FIELDS:
-                if arr.ndim != 2 or arr.shape[1] != len(OP_TYPES):
+                if arr.ndim not in (2, 3) or arr.shape[-1] != len(OP_TYPES):
                     raise ValueError(
-                        f"per-op field {f.name} must be (V, {len(OP_TYPES)}),"
-                        f" got {arr.shape}"
+                        f"per-op field {f.name} must be (V, {len(OP_TYPES)})"
+                        f" or (V, T, {len(OP_TYPES)}), got {arr.shape}"
                     )
+                if arr.ndim == 3 and arr.shape[1] > 1:
+                    width = arr.shape[1]
+                    if t is not None and width != t:
+                        raise ValueError(
+                            f"field {f.name} has per-topology width {width},"
+                            f" but another field has {t}"
+                        )
+                    t = width
             elif arr.ndim == 2:
                 width = arr.shape[1]
                 if width > 1:
@@ -368,15 +378,17 @@ class ModelTable:
 
     @property
     def n_topologies(self) -> "int | None":
-        """Width of the per-topology axis when any scalar field is
-        ``(V, T)``-shaped with T > 1; ``None`` for uniform tables
-        (including ``(V, 1)`` broadcast fields)."""
+        """Width of the per-topology axis when any field carries one with
+        T > 1 — ``(V, T)`` scalars or ``(V, T, 3)`` per-op tuples;
+        ``None`` for uniform tables (including ``(V, 1)`` / ``(V, 1, 3)``
+        broadcast fields)."""
         t = None
         for f in dataclasses.fields(EnergyModel):
-            if f.name in _PER_OP_FIELDS:
-                continue
             arr = getattr(self, f.name)
-            if arr.ndim == 2 and arr.shape[1] > 1:
+            per_op = f.name in _PER_OP_FIELDS
+            if per_op and arr.ndim == 3 and arr.shape[1] > 1:
+                t = arr.shape[1]
+            elif not per_op and arr.ndim == 2 and arr.shape[1] > 1:
                 t = arr.shape[1]
         return t
 
@@ -511,9 +523,12 @@ class ModelTable:
         Local (bitcell-level) variation averages out over a macro
         Pelgrom-style, so the per-macro sigma shrinks with array size:
         ``sigma_t = sigma * sqrt(ref_cells / (rows_t * cols_t))`` with
-        ``ref_cells`` the paper's 128x128 bank.  Each swept field becomes
-        a ``(V, T)`` array — variant ``v`` scales topology ``t`` by an
-        independent ``N(1, sigma_t)`` factor (floored at 0.05;
+        ``ref_cells`` the paper's 128x128 bank.  Each swept scalar field
+        becomes a ``(V, T)`` array and each swept per-op field (e.g.
+        ``e_op_fj`` — per-geometry NAND/NOR/INV discharge energy) a
+        ``(V, T, 3)`` array — variant ``v`` scales topology ``t`` (and,
+        for per-op fields, each op type independently) by an independent
+        ``N(1, sigma_t)`` factor (floored at 0.05;
         ``pipeline_utilization`` capped at 1.0) — which the batched
         kernels broadcast along the grid's topology axis.  Row 0 is the
         nominal model.  ``topologies`` accepts a `SramTopology` sequence
@@ -528,10 +543,7 @@ class ModelTable:
         if not topos:
             raise ValueError("empty topology list")
         fields = tuple(fields)
-        bad = [
-            f for f in fields
-            if f not in SWEEPABLE_FIELDS or f in _PER_OP_FIELDS
-        ]
+        bad = [f for f in fields if f not in SWEEPABLE_FIELDS]
         if bad:
             raise ValueError(f"not sweepable per topology: {bad}")
         cells = np.array([t.rows * t.cols for t in topos], dtype=np.float64)
@@ -540,16 +552,29 @@ class ModelTable:
         names = ("nominal",) + tuple(f"corr{i}" for i in range(1, n))
         table = cls.from_models([base] * n, names=names)
         kw = {}
+        n_t = len(topos)
         for f in fields:
-            factors = np.ones((n, len(topos)), dtype=np.float64)
-            if n > 1:
-                factors[1:] = np.maximum(
-                    rng.normal(1.0, sigma_t[None, :], (n - 1, len(topos))),
-                    0.05,
-                )
-            vals = getattr(base, f) * factors
-            if f == "pipeline_utilization":
-                vals = np.minimum(vals, 1.0)
+            if f in _PER_OP_FIELDS:
+                factors = np.ones((n, n_t, len(OP_TYPES)), dtype=np.float64)
+                if n > 1:
+                    factors[1:] = np.maximum(
+                        rng.normal(
+                            1.0, sigma_t[None, :, None],
+                            (n - 1, n_t, len(OP_TYPES)),
+                        ),
+                        0.05,
+                    )
+                vals = np.asarray(getattr(base, f))[None, None, :] * factors
+            else:
+                factors = np.ones((n, n_t), dtype=np.float64)
+                if n > 1:
+                    factors[1:] = np.maximum(
+                        rng.normal(1.0, sigma_t[None, :], (n - 1, n_t)),
+                        0.05,
+                    )
+                vals = getattr(base, f) * factors
+                if f == "pipeline_utilization":
+                    vals = np.minimum(vals, 1.0)
             kw[f] = vals
         return dataclasses.replace(
             table, topology_names=tuple(t.name for t in topos), **kw
@@ -560,10 +585,12 @@ class ModelTable:
         topology (always true for 1-D / ``(V, 1)`` fields), i.e. when
         ``model(i)`` can materialize it as a single `EnergyModel`."""
         for f in dataclasses.fields(EnergyModel):
-            if f.name in _PER_OP_FIELDS:
-                continue
             v = getattr(self, f.name)[i]
-            if np.ndim(v) and not np.all(v == v.flat[0]):
+            if f.name in _PER_OP_FIELDS:
+                # (T, 3): uniform iff every topology row is identical
+                if v.ndim == 2 and not np.all(v == v[:1]):
+                    return False
+            elif np.ndim(v) and not np.all(v == v.flat[0]):
                 return False
         return True
 
@@ -579,6 +606,17 @@ class ModelTable:
         for f in dataclasses.fields(EnergyModel):
             v = getattr(self, f.name)[i]
             if f.name in _PER_OP_FIELDS:
+                if v.ndim == 2:  # (T, 3) per-topology row
+                    if topology is not None:
+                        v = v[topology if v.shape[0] > 1 else 0]
+                    elif np.all(v == v[:1]):
+                        v = v[0]
+                    else:
+                        raise ValueError(
+                            f"variant {i} ({self.names[i]!r}) is topology-"
+                            f"dependent in field {f.name}; pass topology= "
+                            f"to materialize one column"
+                        )
                 kw[f.name] = tuple(float(x) for x in v)
             elif np.ndim(v):  # (T,) per-topology row
                 if topology is not None:

@@ -927,10 +927,13 @@ def characterize_suite(
       * a persistent on-disk cache (``cache``: a `CharacterizationCache`
         or a directory path) keyed by (circuit fingerprint, recipe,
         `TRANSFORM_VERSION`) — warm lookups skip the transforms entirely;
-      * a ``multiprocessing`` pool (``n_jobs`` workers, default
+      * a process pool (``n_jobs`` workers, default
         ``min(4, cpu_count)``, env override ``REPRO_CHA_JOBS``; ``1``
-        disables) that runs independent prefix branches *and* circuits
-        concurrently, level-synchronously over the DAG depths.
+        disables) driven by an *as-completed futures scheduler*: a
+        transform application is submitted the moment its parent's
+        fingerprint is known, so independent prefix branches and
+        circuits overlap freely and a deep chain (the sine-dominated
+        tail) no longer waits for the rest of its DAG level.
 
     The pool uses the ``spawn`` start method: characterization is pure
     numpy/python, but the parent may have jax/XLA threads loaded (the
@@ -974,50 +977,84 @@ def _run_suite_dag(
     wanted: Sequence[tuple[str, ...]],
     n_jobs: int | None,
 ) -> None:
-    """Evaluate every prefix node of ``wanted`` in all runners, batching the
-    structurally distinct transform applications of each DAG depth onto a
-    process pool (level-synchronous BFS)."""
+    """Evaluate every prefix node of ``wanted`` in all runners on an
+    as-completed futures scheduler.
+
+    A transform application is dispatched to the process pool the moment
+    its parent prefix's fingerprint is known — there is no level barrier,
+    so while one worker grinds through a deep chain (sine's recipes
+    dominate the cold front half) the others drain every independent
+    branch and circuit instead of idling at the end of each DAG depth.
+    Structural dedup is preserved: distinct nodes that resolve to the
+    same (circuit, input fingerprint, transform) application share one
+    in-flight future, and applications a runner already knows resolve
+    instantly and cascade into their children.
+    """
     nodes = prefix_nodes(wanted)
     if not nodes:
         return
     n_jobs = _resolve_jobs(n_jobs)
-    by_depth: dict[int, list[tuple[str, ...]]] = {}
+    if n_jobs == 1:
+        # Serial: the memoized DAG walk itself (depth order from
+        # prefix_nodes guarantees parents resolve first).
+        for runner in runners.values():
+            for node in nodes:
+                runner.run_fp(node)
+        return
+
+    import multiprocessing as mp
+    from concurrent.futures import (
+        FIRST_COMPLETED,
+        ProcessPoolExecutor,
+        wait,
+    )
+
+    # DAG edges: parent prefix -> the nodes it unblocks.  prefix_nodes
+    # includes every non-empty prefix, so each node's parent is () or
+    # another node and the roots are exactly children[()].
+    children: dict[tuple[str, ...], list[tuple[str, ...]]] = {}
     for node in nodes:
-        by_depth.setdefault(len(node), []).append(node)
+        children.setdefault(node[:-1], []).append(node)
 
-    pool = None
-    try:
-        if n_jobs > 1:
-            import multiprocessing as mp
+    # (circuit, src_fp, transform) -> nodes whose resolution awaits the
+    # in-flight application's result.
+    waiting: dict[tuple[str, str, str], list[tuple[str, ...]]] = {}
 
-            pool = mp.get_context("spawn").Pool(n_jobs)
-        for depth in sorted(by_depth):
-            # Distinct (circuit, input structure, transform) applications
-            # this depth needs and does not already know.
+    def advance(name, runner, node, tasks):
+        """Node's parent fp is known: resolve through the memo, or queue
+        the one application it is blocked on; cascades into children of
+        instantly-resolved nodes."""
+        src_fp = runner.run_fp(node[:-1])
+        t = node[-1]
+        if runner.has_applied(src_fp, t):
+            runner.run_fp(node)
+            for child in children.get(node, []):
+                advance(name, runner, child, tasks)
+            return
+        key = (name, src_fp, t)
+        if key in waiting:
+            waiting[key].append(node)
+            return
+        waiting[key] = [node]
+        tasks.append((name, src_fp, t, runner.aig_for(src_fp)))
+
+    with ProcessPoolExecutor(
+        max_workers=n_jobs, mp_context=mp.get_context("spawn")
+    ) as ex:
+        tasks: list[tuple] = []
+        for name, runner in runners.items():
+            for node in children.get((), []):
+                advance(name, runner, node, tasks)
+        pending = {ex.submit(_characterize_task, t) for t in tasks}
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
             tasks = []
-            seen: set[tuple[str, str, str]] = set()
-            for name, runner in runners.items():
-                for node in by_depth[depth]:
-                    src_fp = runner.run_fp(node[:-1])
-                    t = node[-1]
-                    if runner.has_applied(src_fp, t):
-                        continue
-                    key = (name, src_fp, t)
-                    if key in seen:
-                        continue
-                    seen.add(key)
-                    tasks.append((name, src_fp, t, runner.aig_for(src_fp)))
-            if pool is not None and len(tasks) > 1:
-                results = pool.map(_characterize_task, tasks)
-            else:
-                results = [_characterize_task(t) for t in tasks]
-            for name, src_fp, t, aig, stats in results:
-                runners[name].record(src_fp, t, aig, stats)
-            # Resolve this depth's node fingerprints (all applications known).
-            for name, runner in runners.items():
-                for node in by_depth[depth]:
+            for fut in done:
+                name, src_fp, t, aig, stats = fut.result()
+                runner = runners[name]
+                runner.record(src_fp, t, aig, stats)
+                for node in waiting.pop((name, src_fp, t)):
                     runner.run_fp(node)
-    finally:
-        if pool is not None:
-            pool.close()
-            pool.join()
+                    for child in children.get(node, []):
+                        advance(name, runner, child, tasks)
+            pending |= {ex.submit(_characterize_task, t) for t in tasks}

@@ -1,0 +1,498 @@
+"""Fused device-resident pipeline tests: on-device FilterEnergy parity,
+sharding bit-identity, lazy grids, and the per-op (V, T, 3) plumbing.
+
+Contracts under test:
+
+  * `evaluate_select_batch` / `evaluate_select_suite` (evaluate + the
+    three-tier masked argmin fused into one jitted pass) return winners
+    identical to the host-side parity reference (`evaluate_suite` +
+    `select_best_batch`) on every (circuit, variant) cell — including
+    grids salted with NaN/±inf energies via pathological model variants,
+    exact-tie grids (duplicate topology columns; lowest flat index wins),
+    all-infeasible cells, and under latency/feasibility constraints;
+  * an all-non-finite cell raises, exactly like `select_best_batch`;
+  * the 1-device sharded path (`shard=True`) is bit-identical to the
+    unsharded path — winners, per-winner metrics, and the full tensors;
+  * lazy grids materialize to the same arrays the eager path returns,
+    and the fused payload is orders of magnitude below the full-tensor
+    transfer;
+  * one jit trace per fused sweep; float-only model changes do not
+    retrace;
+  * correlated generators may emit per-op ``(V, T, 3)`` fields which
+    flow through the same kernels and match the scalar path cell by
+    cell, with `_check_topo_axis` rejecting mismatched topology lists;
+  * `explore_suite(fused=True)` equals the `fused=False` host path end
+    to end, `VariationResult` quantiles/CVaR included.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import circuits as C
+from repro.core.aig import AigStats
+from repro.core.batch import (
+    SuiteTable,
+    TopologyTable,
+    WorkloadTable,
+    evaluate_batch,
+    evaluate_select_batch,
+    evaluate_select_suite,
+    evaluate_suite,
+    table2_batch,
+    trace_counts,
+)
+from repro.core.explorer import characterize_recipes, explore_suite
+from repro.core.mapping import schedule_stats
+from repro.core.sram import (
+    TOPOLOGY_LIBRARY,
+    EnergyModel,
+    ModelTable,
+    SramTopology,
+    evaluate,
+)
+
+METRIC_KEYS = (
+    "latency_ns", "energy_nj", "power_mw", "throughput_gops", "tops_per_watt"
+)
+
+
+def stats_from_levels(levels):
+    ops = [dict(nand=a, nor=b, inv=c) for a, b, c in levels]
+    return AigStats(
+        n_pis=8, n_pos=4, n_ands=0, n_levels=len(ops), ops_per_level=ops,
+        nand_count=sum(l[0] for l in levels),
+        nor_count=sum(l[1] for l in levels),
+        inv_count=sum(l[2] for l in levels),
+    )
+
+
+def random_workload(rng, n_recipes=6, max_levels=9, max_ops=2000):
+    items = []
+    for i in range(n_recipes):
+        n = int(rng.integers(1, max_levels + 1))
+        levels = [
+            tuple(int(x) for x in rng.integers(0, max_ops, size=3))
+            for _ in range(n)
+        ]
+        items.append(((str(i),), stats_from_levels(levels)))
+    return WorkloadTable.from_stats(items)
+
+
+def salted_table(topos, n=6, seed=0, nan_frac=0.15):
+    """A Monte-Carlo `ModelTable` whose ``p_ctrl_mw`` carries a (V, T)
+    axis salted with NaN/+inf entries — physical-mode energies become
+    non-finite exactly in those (variant, topology) columns, giving the
+    fused filter real NaN-salted grids without tripping the
+    all-non-finite error (row 0 stays clean)."""
+    table = ModelTable.monte_carlo(n=n, sigma=0.2, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    p = np.broadcast_to(
+        table.p_ctrl_mw[:, None], (n, len(topos))
+    ).copy()
+    salt = rng.random((n, len(topos)))
+    salt[0] = 1.0  # nominal variant stays finite everywhere
+    p[salt < nan_frac / 2] = np.nan
+    p[(salt >= nan_frac / 2) & (salt < nan_frac)] = np.inf
+    return dataclasses.replace(
+        table, p_ctrl_mw=p,
+        topology_names=tuple(t.name for t in topos.topologies),
+    )
+
+
+def host_reference(grid, max_latency_ns=None):
+    """The host-side parity reference: (C, V) winners via
+    `SuiteVariationGrid.best_indices` (select_best_batch underneath)."""
+    return grid.best_indices(max_latency_ns)
+
+
+@pytest.fixture(scope="module")
+def workloads():
+    rng = np.random.default_rng(42)
+    work = random_workload(rng)
+    suite = SuiteTable.from_workloads(
+        {"a": work, "b": random_workload(rng, n_recipes=6)}
+    )
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    return work, suite, topos
+
+
+# ---------------------------------------------------------------------------
+# Fused-vs-host winner parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["physical", "paper"])
+@pytest.mark.parametrize("max_lat", [None, 40.0])
+def test_fused_suite_matches_host_selection(workloads, mode, max_lat):
+    _, suite, topos = workloads
+    table = ModelTable.monte_carlo(n=5, sigma=0.3, seed=7)
+    svg = evaluate_suite(suite, topos, table, mode=mode)
+    grid, sel = evaluate_select_suite(
+        suite, topos, table, mode=mode, max_latency_ns=max_lat
+    )
+    host = host_reference(svg, max_lat)
+    np.testing.assert_array_equal(sel.winner_idx.astype(np.int64), host)
+    assert sel.winner_idx.dtype == np.int32
+    # per-winner metrics equal the host gather on every metric
+    c, v = host.shape
+    for k in METRIC_KEYS:
+        flat = getattr(svg, k).reshape(c, v, -1)
+        ref = np.take_along_axis(flat, host[..., None], -1)[..., 0]
+        np.testing.assert_array_equal(sel.winner_metrics[k], ref)
+    # the lazy grid holds the same tensors the host path materialized
+    for k in METRIC_KEYS + ("cycles", "fits"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(grid, k)), getattr(svg, k)
+        )
+
+
+def test_fused_matches_host_on_nan_salted_grids(workloads):
+    _, suite, topos = workloads
+    table = salted_table(topos, n=6, seed=3)
+    svg = evaluate_suite(suite, topos, table)
+    assert not np.isfinite(svg.energy_nj).all()  # the salt is real
+    assert np.isfinite(svg.energy_nj).any(axis=(2, 3)).all()
+    grid, sel = evaluate_select_suite(suite, topos, table)
+    np.testing.assert_array_equal(
+        sel.winner_idx.astype(np.int64), host_reference(svg)
+    )
+    # NaN cells never win
+    c, v = sel.winner_idx.shape
+    assert np.isfinite(sel.winner_energy_nj).all()
+
+
+def test_fused_all_non_finite_raises(workloads):
+    work, suite, topos = workloads
+    # every variant's clock is NaN -> every energy non-finite
+    table = ModelTable.monte_carlo(n=3, sigma=0.1, seed=0)
+    table = dataclasses.replace(
+        table, f_clk_hz=np.full(3, np.nan)
+    )
+    with pytest.raises(ValueError, match="finite"):
+        evaluate_select_suite(suite, topos, table)
+    with pytest.raises(ValueError, match="finite"):
+        evaluate_select_batch(work, topos, table)
+
+
+def test_fused_ties_break_to_lowest_flat_index(workloads):
+    """Duplicate topology columns produce exact-tie energies; the fused
+    argmin must pick the lower flat index, like the host filter."""
+    work, _, _ = workloads
+    dup = TopologyTable.from_topologies(
+        (TOPOLOGY_LIBRARY[4], TOPOLOGY_LIBRARY[4], TOPOLOGY_LIBRARY[4])
+    )
+    vg = evaluate_batch(work, dup, ModelTable.monte_carlo(n=3, seed=1))
+    grid, sel = evaluate_select_batch(
+        work, dup, ModelTable.monte_carlo(n=3, seed=1)
+    )
+    host = vg.best_indices()
+    np.testing.assert_array_equal(sel.winner_idx.astype(np.int64), host)
+    # the duplicate columns really did tie, and column 0 won
+    n_r = len(grid.recipes)
+    assert (host < n_r).all()
+
+
+def test_fused_all_infeasible_falls_through(workloads):
+    """Nothing fits (huge workload) + nothing feasible: the fused filter
+    falls through to the finite-energy tier exactly like the host."""
+    rng = np.random.default_rng(9)
+    big = random_workload(rng, n_recipes=4, max_ops=10_000_000)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY[:4])
+    feas = np.zeros(4, dtype=bool)
+    table = ModelTable.monte_carlo(n=4, sigma=0.2, seed=2)
+    vg = evaluate_batch(big, topos, table, feasible=feas)
+    assert not vg.fits.any()
+    grid, sel = evaluate_select_batch(big, topos, table, feasible=feas)
+    np.testing.assert_array_equal(
+        sel.winner_idx.astype(np.int64), vg.best_indices()
+    )
+
+
+def test_fused_single_model_matches_host(workloads):
+    work, suite, topos = workloads
+    em = EnergyModel()
+    sg = evaluate_suite(suite, topos, em)
+    grid, sel = evaluate_select_suite(suite, topos, em)
+    assert sel.winner_idx.shape == (len(suite), 1)
+    for i, name in enumerate(suite.circuits):
+        assert int(sel.winner_idx[i, 0]) == sg.grid(name).best_index()
+    g, s = evaluate_select_batch(work, topos, em)
+    ref = evaluate_batch(work, topos, em)
+    assert int(s.winner_idx[0]) == ref.best_index()
+    assert g.model == em
+
+
+# ---------------------------------------------------------------------------
+# Sharding, laziness, payload, trace counts
+# ---------------------------------------------------------------------------
+
+
+def test_one_device_sharded_is_bit_identical(workloads):
+    """`shard=True` on a single device builds a 1-device mesh; every
+    output — winners, per-winner metrics, the full tensors — must be
+    bit-identical to the unsharded path."""
+    _, suite, topos = workloads
+    table = ModelTable.monte_carlo(n=4, sigma=0.25, seed=11)
+    g_plain, s_plain = evaluate_select_suite(
+        suite, topos, table, shard=False
+    )
+    g_shard, s_shard = evaluate_select_suite(suite, topos, table, shard=True)
+    assert not s_plain.sharded and s_shard.sharded
+    np.testing.assert_array_equal(s_shard.winner_idx, s_plain.winner_idx)
+    np.testing.assert_array_equal(
+        s_shard.nominal_latency_ns, s_plain.nominal_latency_ns
+    )
+    for k in METRIC_KEYS:
+        np.testing.assert_array_equal(
+            s_shard.winner_metrics[k], s_plain.winner_metrics[k]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(getattr(g_shard, k)), np.asarray(getattr(g_plain, k))
+        )
+
+
+def test_lazy_grid_materializes_identically(workloads):
+    _, suite, topos = workloads
+    table = ModelTable.monte_carlo(n=3, sigma=0.2, seed=5)
+    lazy_grid, _ = evaluate_select_suite(suite, topos, table, lazy=True)
+    eager_grid, _ = evaluate_select_suite(suite, topos, table, lazy=False)
+    # before access the lazy fields are device arrays, not numpy
+    assert not isinstance(lazy_grid._raw("energy_nj"), np.ndarray)
+    for k in METRIC_KEYS + ("cycles", "active_macro_cycles", "fits"):
+        np.testing.assert_array_equal(
+            getattr(lazy_grid, k), getattr(eager_grid, k)
+        )
+    # access materialized + cached the field in place
+    assert isinstance(lazy_grid._raw("energy_nj"), np.ndarray)
+    # sliced views and shape queries inherit laziness
+    lazy2, _ = evaluate_select_suite(suite, topos, table, lazy=True)
+    vgrid = lazy2.variation(suite.circuits[0])
+    assert lazy2.size == eager_grid.size  # .size must not materialize
+    assert not isinstance(lazy2._raw("energy_nj"), np.ndarray)
+    np.testing.assert_array_equal(
+        vgrid.energy_nj, eager_grid.variation(suite.circuits[0]).energy_nj
+    )
+
+
+def test_fused_payload_is_small(workloads):
+    _, suite, topos = workloads
+    table = ModelTable.monte_carlo(n=8, sigma=0.2, seed=6)
+    svg = evaluate_suite(suite, topos, table)
+    _, sel = evaluate_select_suite(suite, topos, table)
+    full = sum(getattr(svg, k).nbytes for k in METRIC_KEYS)
+    assert sel.payload_bytes < full / 10
+    c, v = len(suite), len(table)
+    assert sel.winner_idx.nbytes == c * v * 4  # (C, V) int32
+
+
+def test_fused_traces_once_and_float_changes_do_not_retrace():
+    rng = np.random.default_rng(77)
+    work = random_workload(rng, n_recipes=7)  # unique shape
+    suite = SuiteTable.from_workloads({"x": work, "y": work, "z": work})
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    before = trace_counts().get("fused_suite", 0)
+    _, s1 = evaluate_select_suite(
+        suite, topos, ModelTable.monte_carlo(n=5, sigma=0.1, seed=0)
+    )
+    assert trace_counts().get("fused_suite", 0) == before + 1
+    # float-only model change: served from the jit cache
+    _, s2 = evaluate_select_suite(
+        suite, topos, ModelTable.monte_carlo(n=5, sigma=0.4, seed=9)
+    )
+    assert trace_counts().get("fused_suite", 0) == before + 1
+    assert not np.array_equal(s1.winner_energy_nj, s2.winner_energy_nj)
+    # changing the latency *bound* does not retrace (traced operand)...
+    _, _ = evaluate_select_suite(
+        suite, topos, ModelTable.monte_carlo(n=5, seed=1),
+        max_latency_ns=100.0,
+    )
+    after_lat = trace_counts().get("fused_suite", 0)
+    _, _ = evaluate_select_suite(
+        suite, topos, ModelTable.monte_carlo(n=5, seed=2),
+        max_latency_ns=55.0,
+    )
+    assert trace_counts().get("fused_suite", 0) == after_lat
+
+
+# ---------------------------------------------------------------------------
+# Per-op (V, T, 3) correlated fields
+# ---------------------------------------------------------------------------
+
+
+def test_per_op_topology_axis_shapes_and_validation():
+    table = ModelTable.bitcell_sigma_per_macro(
+        TOPOLOGY_LIBRARY, n=4, sigma=0.3, seed=0,
+        fields=("e_op_fj", "e_op_marginal_fj", "bitcell_um2"),
+    )
+    assert table.e_op_fj.shape == (4, 12, 3)
+    assert table.e_op_marginal_fj.shape == (4, 12, 3)
+    assert table.bitcell_um2.shape == (4, 12)
+    assert table.n_topologies == 12
+    assert table.model(0) == EnergyModel()  # row 0 nominal
+    assert table.uniform_row(0) and not table.uniform_row(1)
+    # topology= materializes one column; without it the row raises
+    m = table.model(1, topology=3)
+    assert m.e_op_marginal_fj == tuple(
+        float(x) for x in table.e_op_marginal_fj[1, 3]
+    )
+    with pytest.raises(ValueError, match="topology-"):
+        table.model(1)
+    # _check_topo_axis: a mismatched per-op axis is rejected
+    short = TopologyTable.from_topologies(TOPOLOGY_LIBRARY[:5])
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="per-topology axis|generated for"):
+        evaluate_batch(random_workload(rng), short, table)
+    with pytest.raises(ValueError, match="per-topology axis|generated for"):
+        table2_batch(short, table)
+    # mixed per-op/scalar widths inside one table are rejected
+    kw = {
+        f.name: getattr(table, f.name)
+        for f in dataclasses.fields(EnergyModel)
+    }
+    kw["e_op_fj"] = np.ones((4, 5, 3))
+    with pytest.raises(ValueError, match="per-topology width"):
+        ModelTable(names=table.names, **kw)
+    # malformed trailing axis is rejected
+    kw["e_op_fj"] = np.ones((4, 12, 2))
+    with pytest.raises(ValueError, match="per-op"):
+        ModelTable(names=table.names, **kw)
+
+
+def test_per_op_correlated_sweep_matches_scalar_path():
+    """Every (variant, topology) cell of a per-op (V, T, 3) sweep equals
+    the scalar path run with that cell's materialized EnergyModel."""
+    rng = np.random.default_rng(15)
+    items = [
+        ((str(i),), stats_from_levels(
+            [tuple(int(x) for x in rng.integers(0, 800, 3))
+             for _ in range(int(rng.integers(1, 6)))]
+        ))
+        for i in range(3)
+    ]
+    work = WorkloadTable.from_stats(items)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    table = ModelTable.bitcell_sigma_per_macro(
+        TOPOLOGY_LIBRARY, n=3, sigma=0.4, seed=8,
+        fields=("e_op_fj", "e_op_marginal_fj"),
+    )
+    vg = evaluate_batch(work, topos, table)
+    for v in range(3):
+        for t in range(len(TOPOLOGY_LIBRARY)):
+            m = table.model(v, topology=t)
+            topo = TOPOLOGY_LIBRARY[t]
+            for r, (_, stats) in enumerate(items):
+                met = evaluate(schedule_stats(stats, topo), topo, m)
+                np.testing.assert_allclose(
+                    vg.energy_nj[v, t, r], met.energy_nj, rtol=1e-12
+                )
+    # table2 over the per-op table matches column materialization
+    tb = table2_batch(topos, table)
+    for v in range(3):
+        for t in range(len(TOPOLOGY_LIBRARY)):
+            ref = table2_batch(
+                TopologyTable.from_topologies([TOPOLOGY_LIBRARY[t]]),
+                table.model(v, topology=t),
+            )
+            np.testing.assert_allclose(
+                tb["power_mw"][v, t], ref["power_mw"][0], rtol=1e-12
+            )
+    # ...and the fused filter handles the (V, T, 3) shape too
+    grid, sel = evaluate_select_batch(work, topos, table)
+    np.testing.assert_array_equal(
+        sel.winner_idx.astype(np.int64), vg.best_indices()
+    )
+
+
+# ---------------------------------------------------------------------------
+# explore_suite end to end: fused == host, quantiles/CVaR
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bar_suite():
+    suite = C.benchmark_suite(scale="tiny", only=("bar",))
+    cha = {"bar": characterize_recipes(suite["bar"])}
+    return suite, cha
+
+
+def test_explore_suite_fused_equals_host_path(bar_suite):
+    suite, cha = bar_suite
+    table = ModelTable.monte_carlo(n=6, sigma=0.25, seed=4)
+    fused = explore_suite(suite, cha=cha, model_sweep=table, fused=True)
+    host = explore_suite(suite, cha=cha, model_sweep=table, fused=False)
+    for name in suite:
+        f, h = fused[name], host[name]
+        assert (f.best.recipe, f.best.topo) == (h.best.recipe, h.best.topo)
+        assert f.best.metrics.energy_nj == h.best.metrics.energy_nj
+        vf, vh = f.variation, h.variation
+        assert vf.winners == vh.winners
+        assert vf.winner_share == vh.winner_share
+        assert vf.best_yield == vh.best_yield
+        assert vf.latency_yield == vh.latency_yield
+        np.testing.assert_array_equal(
+            vf.winner_energy_nj, vh.winner_energy_nj
+        )
+        assert vf.energy_quantiles == vh.energy_quantiles
+        assert vf.cvar(0.9) == vh.cvar(0.9)
+
+
+def test_explore_suite_fused_with_latency_bound(bar_suite):
+    suite, cha = bar_suite
+    table = ModelTable.corners(spread=0.2)
+    fused = explore_suite(
+        suite, cha=cha, model_sweep=table, max_latency_ns=30.0, fused=True
+    )
+    host = explore_suite(
+        suite, cha=cha, model_sweep=table, max_latency_ns=30.0, fused=False
+    )
+    for name in suite:
+        assert fused[name].variation.winners == host[name].variation.winners
+        assert (
+            fused[name].variation.latency_yield
+            == host[name].variation.latency_yield
+        )
+
+
+def test_fused_matches_host_on_full_ci_grid_with_nan_salt(bar_suite):
+    """Acceptance: fused winners == host `select_best_batch` winners on
+    every (circuit, variant) cell of the full 65 x 12 CI grid, with
+    NaN/+inf-salted model variants in the sweep."""
+    suite, cha = bar_suite
+    suite_table = SuiteTable.from_cha(cha)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    table = salted_table(topos, n=8, seed=17)
+    svg = evaluate_suite(suite_table, topos, table)
+    assert svg.energy_nj.shape[2:] == (12, 65)
+    assert not np.isfinite(svg.energy_nj).all()
+    for max_lat in (None, 40.0):
+        grid, sel = evaluate_select_suite(
+            suite_table, topos, table, max_latency_ns=max_lat
+        )
+        np.testing.assert_array_equal(
+            sel.winner_idx.astype(np.int64), svg.best_indices(max_lat)
+        )
+
+
+def test_variation_quantiles_and_cvar_reference(bar_suite):
+    suite, cha = bar_suite
+    table = ModelTable.monte_carlo(n=16, sigma=0.3, seed=12)
+    var = explore_suite(suite, cha=cha, model_sweep=table)["bar"].variation
+    e = var.winner_energy_nj
+    assert e.shape == (16,)
+    # quantiles are plain np.quantile over the winner energies
+    for q, val in var.energy_quantiles.items():
+        assert val == pytest.approx(float(np.quantile(e, q)))
+    # cvar: mean of the worst (1 - alpha) tail, monotone in alpha
+    srt = np.sort(e)
+    assert var.cvar(0.75) == pytest.approx(srt[-4:].mean())
+    assert var.cvar(0.0) == pytest.approx(e.mean())
+    assert var.cvar(0.9) <= var.cvar(0.95) + 1e-18
+    assert var.cvar(0.95) == pytest.approx(srt[-1])
+    with pytest.raises(ValueError, match="alpha"):
+        var.cvar(1.0)
+    # winner energies equal the per-variant winner cells of the grid
+    flat = var.grid.energy_nj.reshape(16, -1)
+    idx = var.grid.best_indices()
+    np.testing.assert_array_equal(e, flat[np.arange(16), idx])

@@ -12,7 +12,9 @@ masked three-tier argmin that replaced the per-variant python loop):
     a pathological Monte-Carlo variant can no longer "win" with a NaN —
     and an all-non-finite cell raises instead of returning garbage;
   * mask broadcasting: one model-free ``(1, N)`` / ``(C, 1, N)``
-    fits/feasible mask serves every variant row.
+    fits/feasible mask serves every variant row;
+  * the jitted device reduction (`select_best_batch_device`, the
+    standalone fused filter) returns identical winners and errors.
 
 The property suite runs under hypothesis when installed; deterministic
 seeded versions of the same assertions always run.
@@ -24,6 +26,7 @@ import pytest
 from repro.core.batch import (
     select_best,
     select_best_batch,
+    select_best_batch_device,
     select_best_worst,
 )
 
@@ -193,6 +196,49 @@ def test_select_best_worst_is_nan_safe():
     fits = np.array([True, False, True, False, True, False])
     best, worst = select_best_worst(energy, fits)
     assert (best, worst) == (1, 3)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_device_selection_matches_host_on_salted_grids(seed):
+    """The jitted device reduction (`select_best_batch_device`) is the
+    same filter as the host `select_best_batch`: identical winners on
+    NaN/±inf-salted grids under every constraint combination."""
+    rng = np.random.default_rng(200 + seed)
+    energy, latency, fits, feasible = salted_grid(rng)
+    max_lat = float(np.nanmedian(latency))
+    for kw in (
+        dict(),
+        dict(latency=latency, max_latency=max_lat),
+        dict(feasible=feasible[None, :]),
+        dict(latency=latency, max_latency=max_lat,
+             feasible=feasible[None, :]),
+    ):
+        host = select_best_batch(energy, fits[None, :], **kw)
+        dev = select_best_batch_device(energy, fits[None, :], **kw)
+        np.testing.assert_array_equal(dev, host)
+
+
+def test_device_selection_errors_match_host():
+    bad = np.array([[np.nan, np.inf, -np.inf], [1.0, 2.0, 3.0]])
+    ok = np.ones((1, 3), dtype=bool)
+    with pytest.raises(ValueError, match="finite"):
+        select_best_batch_device(bad, ok)
+    with pytest.raises(ValueError, match="empty"):
+        select_best_batch_device(
+            np.empty((3, 0)), np.empty((3, 0), dtype=bool)
+        )
+
+
+def test_device_selection_ties_and_tiers():
+    # exact ties break to the lowest flat index, like the host filter
+    energy = np.array([[2.0, 1.0, 1.0, 1.0], [1.0, 1.0, 2.0, 2.0]])
+    fits = np.array([[True, False, True, True], [True, True, True, True]])
+    assert select_best_batch_device(energy, fits).tolist() == [2, 0]
+    # all-infeasible tiers fall through identically
+    energy = np.array([[5.0, 1.0, 3.0]])
+    assert int(
+        select_best_batch_device(energy, np.zeros((1, 3), dtype=bool))[0]
+    ) == 1
 
 
 def test_mesh_variation_summary_matches_per_variant_loop():

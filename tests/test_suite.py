@@ -106,7 +106,12 @@ def test_prefix_nodes_order():
 
 
 def test_characterize_suite_parallel_matches_serial(tiny_pair):
-    few = enumerate_recipes()[:6]
+    # include deep chains so the as-completed scheduler's cascade path
+    # (resolve -> children -> submit) is exercised, not just the roots
+    few = enumerate_recipes()[:6] + [
+        ("Ba", "Rf", "Rw", "Rs"), ("Rs", "Rw", "Rf", "Ba"),
+        ("Rw", "Ba", "Rs"),
+    ]
     serial = characterize_suite(tiny_pair, few, n_jobs=1)
     parallel = characterize_suite(tiny_pair, few, n_jobs=2)
     assert serial == parallel

@@ -442,10 +442,16 @@ def test_correlated_generator_shapes_and_validation():
     # column 0 is (256x128), column 11 is (256x1024)
     spread = table.bitcell_um2[1:].std(axis=0)
     assert spread[0] > spread[9]
-    # per-op and unknown fields are rejected
+    # per-op fields produce a (V, T, 3) axis (tests/test_fused.py covers
+    # their kernel parity); unknown fields are rejected
+    per_op = ModelTable.bitcell_sigma_per_macro(
+        TOPOLOGY_LIBRARY, n=3, fields=("e_op_fj",)
+    )
+    assert per_op.e_op_fj.shape == (3, 12, 3)
+    assert per_op.n_topologies == 12
     with pytest.raises(ValueError, match="not sweepable"):
         ModelTable.bitcell_sigma_per_macro(
-            TOPOLOGY_LIBRARY, fields=("e_op_fj",)
+            TOPOLOGY_LIBRARY, fields=("nonsense",)
         )
     with pytest.raises(ValueError, match="empty topology"):
         ModelTable.bitcell_sigma_per_macro(())
@@ -598,14 +604,16 @@ def test_suite_best_indices_match_select_best_loop(bar_suite):
 
 def test_correlated_explore_suite_end_to_end(bar_suite):
     """Acceptance: a (V, T) correlated sweep through
-    `explore_suite(model_sweep=...)` -> yield summary, in ONE compile."""
+    `explore_suite(model_sweep=...)` -> yield summary, in ONE compile
+    (of the fused evaluate+select kernel — the default device-resident
+    path since the selection stage moved on device)."""
     suite, cha = bar_suite
     table = ModelTable.bitcell_sigma_per_macro(
         TOPOLOGY_LIBRARY, n=5, sigma=0.5, seed=2
     )
-    before = trace_counts().get("evaluate_suite", 0)
+    before = trace_counts().get("fused_suite", 0)
     res = explore_suite(suite, cha=cha, model_sweep=table)["bar"]
-    assert trace_counts().get("evaluate_suite", 0) == before + 1
+    assert trace_counts().get("fused_suite", 0) == before + 1
     var = res.variation
     assert var is not None and var.n_variants == 5
     assert res.n_evaluations == 65 * 12

@@ -17,11 +17,11 @@ def main() -> None:
     ap.add_argument("--scale", choices=["tiny", "default", "paper"], default="tiny")
     ap.add_argument("--only", default=None,
                     help="comma list: fig9,table1,table2,variation,kernel,"
-                         "roofline,explorer")
+                         "roofline,explorer,characterization")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
         "fig9", "table1", "table2", "variation", "kernel", "roofline",
-        "explorer",
+        "explorer", "characterization",
     }
 
     from .common import Csv
@@ -57,7 +57,18 @@ def main() -> None:
     if "kernel" in which:
         from . import bench_kernel
 
-        bench_kernel.run(csv)
+        # merged into BENCH_explorer.json under "kernel" alongside the
+        # explorer / variation / characterization sections
+        bench_kernel.run(csv, out_json="BENCH_explorer.json")
+    if "characterization" in which:
+        from . import bench_characterization
+
+        # front-half device-vs-python record, merged under
+        # "characterization" in BENCH_explorer.json
+        bench_characterization.run(
+            csv, scale=args.scale, out_json="BENCH_explorer.json",
+            serial_reference=False,
+        )
     if "roofline" in which:
         from . import bench_roofline
 

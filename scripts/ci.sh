@@ -50,6 +50,39 @@ print(f"suite sweep speedup: {total['speedup']}x "
       f"e2e cold {total['e2e']['cold_s']}s / warm {total['e2e']['warm_s']}s")
 EOF
 
+    echo "== characterization bench (smoke, device vs python front half) =="
+    python -m benchmarks.bench_characterization --smoke \
+        --out runs/BENCH_explorer_smoke.json
+    python - <<'EOF'
+import json
+with open("runs/BENCH_explorer_smoke.json") as f:
+    r = json.load(f)
+assert "characterization" in r, \
+    "bench must record a 'characterization' section"
+cha = r["characterization"]
+assert cha["backend_available"], \
+    "device characterization backend unavailable (jax import failed)"
+assert cha["parity"]["agree"], \
+    "device and python characterization disagree (AigStats or transform " \
+    "fingerprints differ on some (circuit, recipe))"
+assert cha["parity"]["stats_checked"] > 0, "parity check did not run"
+for t, pt in cha["per_transform"].items():
+    assert pt["fingerprints_agree"], \
+        f"transform {t}: device output fingerprint differs from python"
+# The cold-start contract: once the persistent caches exist (XLA compile
+# cache + CharacterizationCache), a fresh characterization run beats
+# recomputing through the python-int path outright.
+assert cha["device_warm_s"] < cha["python_cold_s"], \
+    f"cache-warm device characterization ({cha['device_warm_s']}s) must " \
+    f"beat the cold python path ({cha['python_cold_s']}s)"
+assert cha["device_warm_s"] < cha["device_cold_s"], \
+    "warm characterization cache not faster than cold"
+print(f"characterization: python cold {cha['python_cold_s']}s, device "
+      f"cold {cha['device_cold_s']}s / warm {cha['device_warm_s']}s; "
+      f"parity on {cha['parity']['stats_checked']} (circuit, recipe) "
+      f"stats + all transform fingerprints")
+EOF
+
     echo "== model-variation sweep bench (smoke) =="
     python -m benchmarks.bench_variation --smoke --skip-pvt \
         --out runs/BENCH_explorer_smoke.json

@@ -400,6 +400,34 @@ class Aig:
     def clone(self) -> "Aig":
         return self.rebuild_mapped()
 
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-safe exact structure (fanin literal arrays + POs).
+
+        Round-trips through `from_dict` node-for-node, so the
+        `fingerprint` is preserved — the property the persistent
+        characterization cache relies on to warm-start the recipe DAG
+        from on-disk intermediate structures."""
+        return dict(
+            n_pis=self.n_pis,
+            f0=[int(x) for x in self._f0],
+            f1=[int(x) for x in self._f1],
+            pos=[int(p) for p in self.pos],
+            name=self.name,
+        )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Aig":
+        """Rebuild the exact structure (same node order, same fingerprint)."""
+        aig = cls(int(d["n_pis"]), name=d.get("name", "aig"))
+        aig._f0 = [int(x) for x in d["f0"]]
+        aig._f1 = [int(x) for x in d["f1"]]
+        aig.pos = [int(p) for p in d["pos"]]
+        for node in range(aig.n_pis + 1, aig.n_nodes):
+            aig._strash[(aig._f0[node], aig._f1[node])] = lit(node)
+        return aig
+
     def fingerprint(self) -> str:
         """Hex digest of the exact structure (PIs, fanin arrays, POs).
 

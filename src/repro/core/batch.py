@@ -657,6 +657,42 @@ class _LazyArrays:
         """The stored array without materializing it (device or numpy)."""
         return object.__getattribute__(self, name)
 
+    def _cell_scalar(self, name: str, idx: tuple) -> float:
+        """One element of a (possibly device-resident) field.
+
+        Indexing the raw array first keeps the gather on the device and
+        moves a single scalar across the boundary — the full tensor is
+        NOT materialized (and stays lazy for later accesses).
+        """
+        return float(np.asarray(self._raw(name)[idx]))
+
+
+@dataclasses.dataclass(frozen=True)
+class GridCell:
+    """One design point of a sweep grid — the lazy per-cell gather result.
+
+    Produced by the grids' ``cell(...)`` methods for post-hoc inspection
+    of a single (circuit, variant, topology, recipe) choice without
+    materializing the full device tensor: each field is a one-element
+    device gather.  ``circuit``/``variant`` are None on grids without
+    that axis.
+    """
+
+    recipe: tuple[str, ...]
+    topology: SramTopology
+    circuit: str | None
+    variant: int | None
+    cycles: int
+    active_macro_cycles: int
+    fits: bool
+    feasible: bool
+    latency_ns: float
+    energy_nj: float
+    power_mw: float
+    throughput_gops: float
+    tops_per_watt: float
+    area_mm2: float
+
 
 @dataclasses.dataclass(frozen=True)
 class ExplorationGrid(_LazyArrays):
@@ -711,6 +747,27 @@ class ExplorationGrid(_LazyArrays):
 
     def best_worst_indices(self) -> tuple[int, int]:
         return select_best_worst(self.energy_nj, self.fits)
+
+    def cell(self, t: int, r: int) -> GridCell:
+        """One (topology, recipe) design point as a `GridCell` — lazy
+        per-element gathers, never materializes the full grid."""
+        g = self._cell_scalar
+        return GridCell(
+            recipe=self.recipes[r],
+            topology=self.topologies[t],
+            circuit=None,
+            variant=None,
+            cycles=int(g("cycles", (t, r))),
+            active_macro_cycles=int(g("active_macro_cycles", (t, r))),
+            fits=bool(g("fits", (t, r))),
+            feasible=bool(np.asarray(self._raw("feasible")[t])),
+            latency_ns=g("latency_ns", (t, r)),
+            energy_nj=g("energy_nj", (t, r)),
+            power_mw=g("power_mw", (t, r)),
+            throughput_gops=g("throughput_gops", (t, r)),
+            tops_per_watt=g("tops_per_watt", (t, r)),
+            area_mm2=float(np.asarray(self._raw("area_mm2")[t])),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -795,6 +852,28 @@ class VariationGrid(_LazyArrays):
             latency=self.latency_ns.reshape(v, -1),
             max_latency=max_latency_ns,
             feasible=feas.reshape(1, -1),
+        )
+
+    def cell(self, v: int, t: int, r: int) -> GridCell:
+        """One (variant, topology, recipe) design point as a `GridCell`
+        — lazy per-element gathers, never materializes the full
+        ``(V, T, R)`` tensors."""
+        g = self._cell_scalar
+        return GridCell(
+            recipe=self.recipes[r],
+            topology=self.topologies[t],
+            circuit=None,
+            variant=v,
+            cycles=int(g("cycles", (t, r))),
+            active_macro_cycles=int(g("active_macro_cycles", (t, r))),
+            fits=bool(g("fits", (t, r))),
+            feasible=bool(np.asarray(self._raw("feasible")[t])),
+            latency_ns=g("latency_ns", (v, t, r)),
+            energy_nj=g("energy_nj", (v, t, r)),
+            power_mw=g("power_mw", (v, t, r)),
+            throughput_gops=g("throughput_gops", (v, t, r)),
+            tops_per_watt=g("tops_per_watt", (v, t, r)),
+            area_mm2=float(np.asarray(self._raw("area_mm2")[v, t])),
         )
 
 
@@ -988,6 +1067,29 @@ class SuiteGrid(_LazyArrays):
     def grids(self) -> dict[str, ExplorationGrid]:
         return {name: self.grid(name) for name in self.circuits}
 
+    def cell(self, circuit: str | int, t: int, r: int) -> GridCell:
+        """One (circuit, topology, recipe) design point as a `GridCell`
+        — lazy per-element gathers, never materializes the full
+        ``(C, T, R)`` tensors."""
+        c = self.circuit_index(circuit)
+        g = self._cell_scalar
+        return GridCell(
+            recipe=self.recipes[r],
+            topology=self.topologies[t],
+            circuit=self.circuits[c],
+            variant=None,
+            cycles=int(g("cycles", (c, t, r))),
+            active_macro_cycles=int(g("active_macro_cycles", (c, t, r))),
+            fits=bool(g("fits", (c, t, r))),
+            feasible=bool(np.asarray(self._raw("feasible")[c, t])),
+            latency_ns=g("latency_ns", (c, t, r)),
+            energy_nj=g("energy_nj", (c, t, r)),
+            power_mw=g("power_mw", (c, t, r)),
+            throughput_gops=g("throughput_gops", (c, t, r)),
+            tops_per_watt=g("tops_per_watt", (c, t, r)),
+            area_mm2=float(np.asarray(self._raw("area_mm2")[t])),
+        )
+
 
 def schedule_suite(
     suite: SuiteTable,
@@ -1114,6 +1216,29 @@ class SuiteVariationGrid(_LazyArrays):
             latency=self.latency_ns.reshape(c, v, -1),
             max_latency=max_latency_ns,
             feasible=feas.reshape(c, 1, -1),
+        )
+
+    def cell(self, circuit: str | int, v: int, t: int, r: int) -> GridCell:
+        """One (circuit, variant, topology, recipe) point of the full
+        hypercube as a `GridCell` — lazy per-element gathers, never
+        materializes the ``(C, V, T, R)`` tensors."""
+        c = self.circuit_index(circuit)
+        g = self._cell_scalar
+        return GridCell(
+            recipe=self.recipes[r],
+            topology=self.topologies[t],
+            circuit=self.circuits[c],
+            variant=v,
+            cycles=int(g("cycles", (c, t, r))),
+            active_macro_cycles=int(g("active_macro_cycles", (c, t, r))),
+            fits=bool(g("fits", (c, t, r))),
+            feasible=bool(np.asarray(self._raw("feasible")[c, t])),
+            latency_ns=g("latency_ns", (c, v, t, r)),
+            energy_nj=g("energy_nj", (c, v, t, r)),
+            power_mw=g("power_mw", (c, v, t, r)),
+            throughput_gops=g("throughput_gops", (c, v, t, r)),
+            tops_per_watt=g("tops_per_watt", (c, v, t, r)),
+            area_mm2=float(np.asarray(self._raw("area_mm2")[v, t])),
         )
 
 

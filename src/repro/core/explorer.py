@@ -192,6 +192,7 @@ def characterize_recipes(
     recipes: Sequence[tuple[str, ...]] | None = None,
     cache: "CharacterizationCache | str | os.PathLike | None" = None,
     n_jobs: int | None = 1,
+    cha_backend: str = "auto",
 ) -> dict[tuple[str, ...], AigStats]:
     """Alg. I lines 3-6: create + characterize every recipe AIG, including
     the un-transformed baseline recipe ``()`` first.
@@ -200,10 +201,16 @@ def characterize_recipes(
     ``cache`` (a `CharacterizationCache` or a directory path) makes the
     result persistent across runs, ``n_jobs`` > 1 characterizes
     independent prefix branches on a process pool (default serial — one
-    circuit rarely amortizes worker startup).
+    circuit rarely amortizes worker startup).  ``cha_backend`` picks the
+    transform engine: ``"device"`` (batched `kernels.aig_sim` truth
+    tables), ``"python"`` (the bigint parity reference), or ``"auto"``.
     """
     return characterize_suite(
-        {rtl.name: rtl}, recipes, cache=cache, n_jobs=n_jobs
+        {rtl.name: rtl},
+        recipes,
+        cache=cache,
+        n_jobs=n_jobs,
+        backend=cha_backend,
     )[rtl.name]
 
 
@@ -271,6 +278,7 @@ def explore(
     cache: "CharacterizationCache | str | os.PathLike | None" = None,
     n_jobs: int | None = 1,
     fused: bool = True,
+    cha_backend: str = "auto",
 ) -> ExplorationResult:
     """Algorithm I for one circuit.
 
@@ -300,6 +308,11 @@ def explore(
             same jitted pass (`batch.evaluate_select_batch`) so only the
             winner crosses the host boundary and the grid stays lazy;
             ``False`` keeps the host-side `select_best` path.
+        cha_backend: transform engine for the *front* half —
+            ``"device"`` (batched `kernels.aig_sim` truth tables),
+            ``"python"`` (bigint parity reference), or ``"auto"``
+            (device when jax is importable).  Independent of
+            ``backend``, which picks the back-half sweep engine.
 
     Returns:
         `ExplorationResult`: the min-energy admissible implementation
@@ -315,7 +328,9 @@ def explore(
 
     # Lines 3-6: create + characterize (or reuse the caller's cache).
     if cha is None:
-        cha = characterize_recipes(rtl, recipes, cache=cache, n_jobs=n_jobs)
+        cha = characterize_recipes(
+            rtl, recipes, cache=cache, n_jobs=n_jobs, cha_backend=cha_backend
+        )
     cha = _restrict_cha(cha, recipes)
     all_recipes = list(cha)
 
@@ -464,13 +479,16 @@ def explore_suite(
     model_sweep: ModelTable | None = None,
     fused: bool = True,
     shard: "bool | None" = None,
+    cha_backend: str = "auto",
 ) -> dict[str, ExplorationResult]:
     """Algorithm I over a whole benchmark suite in two device-sized steps.
 
     Front half: one `transforms.characterize_suite` call — the 64-recipe
     prefix DAG per circuit with structural dedup, optional persistent
     ``cache``, and a process pool over independent branches and circuits
-    (``n_jobs``, default ``min(4, cpu_count)``).
+    (``n_jobs``, default ``min(4, cpu_count)``).  ``cha_backend`` picks
+    its transform engine: ``"device"`` (batched `kernels.aig_sim` truth
+    tables), ``"python"`` (bigint parity reference), or ``"auto"``.
 
     Back half (``backend="jax"``): the characterizations are stacked into
     a `batch.SuiteTable` and ONE `batch.evaluate_suite` call sweeps
@@ -518,7 +536,9 @@ def explore_suite(
         model = EnergyModel()
 
     if cha is None:
-        cha = characterize_suite(circuits, recipes, cache=cache, n_jobs=n_jobs)
+        cha = characterize_suite(
+            circuits, recipes, cache=cache, n_jobs=n_jobs, backend=cha_backend
+        )
     cha = {name: _restrict_cha(cha[name], recipes) for name in circuits}
 
     if backend == "python":

@@ -27,7 +27,7 @@ import itertools
 import json
 import os
 import tempfile
-from functools import lru_cache
+from functools import lru_cache, partial
 from pathlib import Path
 from typing import Callable, Mapping, Sequence
 
@@ -325,9 +325,16 @@ def _mffc_size(
 # ===========================================================================
 
 
-def rewrite(aig: Aig, k: int = 4, max_cuts: int = 8) -> Aig:
+def rewrite(aig: Aig, k: int = 4, max_cuts: int = 8, backend: str = "python") -> Aig:
     """DAG-aware cut rewriting (ABC ``rewrite``): for every node, try to
-    replace its best k-cut cone with a smaller synthesized cone."""
+    replace its best k-cut cone with a smaller synthesized cone.
+
+    ``backend="device"`` batches the truth-table/MFFC queries through
+    `kernels.aig_sim` with bit-identical output (the python path is the
+    parity reference); ``auto`` picks device when jax is available.
+    """
+    if resolve_backend(backend) == "device":
+        return _rewrite_device(aig, k=k, max_cuts=max_cuts)
     cuts = _enumerate_cuts(aig, k=k, max_cuts=max_cuts)
     fanout = aig.fanout_counts()
     new = Aig(aig.n_pis, name=aig.name)
@@ -400,12 +407,33 @@ def _reconv_cut(aig: Aig, root: int, max_leaves: int = 10) -> list[int]:
     return sorted(leaves)
 
 
+#: Global memo for `_isop` — the Minato–Morreale recursion re-derives the
+#: same (tt, care) subproblems across cones, circuits, and recipes (it is
+#: the single hottest part of a cold ``refactor`` pass).  The function is
+#: a pure map from (tt, care, k) to its cube list, so memoization cannot
+#: change any transform output (TRANSFORM_VERSION stays put).  Entries are
+#: capped to bound memory; the cap is far above a full-suite run.
+_ISOP_CACHE: dict[tuple[int, int, int], tuple[tuple[int, int], ...]] = {}
+_ISOP_CACHE_MAX = 1_000_000
+
+
 def _isop(tt: int, care: int, k: int) -> list[tuple[int, int]]:
     """Minato–Morreale irredundant SOP.  Returns cubes as (pos_mask, neg_mask)
     over variable indices; cube covers patterns where all pos vars=1, neg=0."""
     full = _tt_mask(k)
     tt &= full
     care &= full
+    key = (tt, care, k)
+    hit = _ISOP_CACHE.get(key)
+    if hit is not None:
+        return list(hit)
+    res = _isop_uncached(tt, care, k)
+    if len(_ISOP_CACHE) < _ISOP_CACHE_MAX:
+        _ISOP_CACHE[key] = tuple(res)
+    return res
+
+
+def _isop_uncached(tt: int, care: int, k: int) -> list[tuple[int, int]]:
     if care == 0:
         return []
     if tt & care == 0:
@@ -510,8 +538,14 @@ def _factor_cubes(aig: Aig, cubes: list[tuple[int, int]], leaves: list[int]) -> 
     return aig.g_or(aig.g_and(lit_l, quot), rest)
 
 
-def refactor(aig: Aig, max_leaves: int = 10) -> Aig:
-    """Collapse + refactor large cones (ABC ``refactor``)."""
+def refactor(aig: Aig, max_leaves: int = 10, backend: str = "python") -> Aig:
+    """Collapse + refactor large cones (ABC ``refactor``).
+
+    ``backend="device"`` batches cone truth tables through
+    `kernels.aig_sim`; output is bit-identical to the python path.
+    """
+    if resolve_backend(backend) == "device":
+        return _refactor_device(aig, max_leaves=max_leaves)
     fanout = aig.fanout_counts()
     new = Aig(aig.n_pis, name=aig.name)
     mapping: dict[int, int] = {0: CONST0}
@@ -560,14 +594,19 @@ def refactor(aig: Aig, max_leaves: int = 10) -> Aig:
 # ===========================================================================
 
 
-def resub(aig: Aig, n_words: int = 32, seed: int = 7) -> Aig:
+def resub(aig: Aig, n_words: int = 32, seed: int = 7, backend: str = "python") -> Aig:
     """Simulation-guided, window-exact resubstitution (ABC ``resub``).
 
     1. Global random simulation produces a signature per node.
     2. Signature-equal (or complement) node pairs are *candidate* equivalences,
        verified exactly over the union of structural supports (≤14 PIs) —
        verified pairs merge (0-resub / functional reduction).
+
+    ``backend="device"`` runs signatures and verification truth tables
+    through `kernels.aig_sim`; output is bit-identical to the python path.
     """
+    if resolve_backend(backend) == "device":
+        return _resub_device(aig, n_words=n_words, seed=seed)
     rng = np.random.default_rng(seed)
     if aig.n_pis == 0 or aig.n_ands == 0:
         return aig
@@ -654,6 +693,313 @@ def _supports(aig: Aig, cap: int = 14) -> list[set[int] | None]:
 
 
 # ===========================================================================
+# Device backend (kernels/aig_sim) — batched truth-table characterization
+# ===========================================================================
+#
+# The device variants below are *bit-identical* re-stagings of the python
+# transforms: every decision (truth table, MFFC size, plan, ISOP cubes,
+# resub candidate order) is a pure function of the ORIGINAL AIG, so each
+# transform splits into a precompute phase — one batched device call per
+# query family instead of per-node python cone walks — and a sequential
+# rebuild phase that replays the python path's decisions in its exact
+# order.  Because outputs are identical, TRANSFORM_VERSION does not bump
+# and on-disk cache entries stay valid across backends (CI asserts this).
+
+
+def resolve_backend(backend: str | None) -> str:
+    """Resolve a characterization backend name to ``python`` or ``device``.
+
+    ``auto`` (or None) picks ``device`` when jax imports, else ``python``
+    — same discipline as the sweep backends in `core.batch`.
+    """
+    if backend is None or backend == "auto":
+        from repro.kernels.aig_sim import jax_available
+
+        return "device" if jax_available() else "python"
+    if backend not in ("python", "device"):
+        raise ValueError(f"unknown characterization backend {backend!r}")
+    return backend
+
+
+def _cone_matrix(
+    aig: Aig, roots: Sequence[int], leaves_list: Sequence[Sequence[int]]
+) -> np.ndarray:
+    """(B, n_nodes) bool cone membership for a batch of (root, leaves)
+    queries — the vectorized counterpart of `Aig.cone_nodes` (AND nodes
+    only, stopping at and excluding the leaves).
+
+    One descending-index scan over the node array serves the whole batch:
+    node indices are topological, so by the time the scan reaches ``n``
+    every cone that contains ``n`` has already marked it.
+    """
+    n = aig.n_nodes
+    n_b = len(roots)
+    roots_a = np.asarray(roots, dtype=np.int64)
+    f0 = np.asarray(aig._f0, dtype=np.int64)
+    f1 = np.asarray(aig._f1, dtype=np.int64)
+    # (n_nodes, batch) scan layout: node rows are contiguous (see
+    # `aig_sim._cone_members`), transposed back on return.
+    vis = np.zeros((n, n_b), dtype=bool)
+    leaf = np.zeros((n, n_b), dtype=bool)
+    for i, lvs in enumerate(leaves_list):
+        leaf[list(lvs), i] = True
+    vis[roots_a, np.arange(n_b)] = True
+    for node in range(int(roots_a.max()), aig.n_pis, -1):
+        act = vis[node] & ~leaf[node]
+        if act.any():
+            vis[f0[node] >> 1][act] = True
+            vis[f1[node] >> 1][act] = True
+    members = vis & ~leaf
+    members[: aig.n_pis + 1] = False
+    return np.ascontiguousarray(members.T)
+
+
+def _mffc_sizes_batch(
+    aig: Aig,
+    roots: Sequence[int],
+    members: np.ndarray,
+    fanout: np.ndarray,
+) -> np.ndarray:
+    """(B,) MFFC sizes matching `_mffc_size` for each (root, cone) row of
+    ``members`` (from `_cone_matrix`): cone nodes whose every fanout
+    reference comes from inside the cone, the root always counted."""
+    n = aig.n_nodes
+    n_b = members.shape[0]
+    f0 = np.asarray(aig._f0, dtype=np.int64) >> 1
+    f1 = np.asarray(aig._f1, dtype=np.int64) >> 1
+    # Cones are tiny relative to the graph, so work on the sparse member
+    # entries: bincount the two fanin edges of every (item, cone node)
+    # pair into per-item reference counts, then test each member entry.
+    b_idx, node_idx = np.nonzero(members)
+    keys = np.concatenate([b_idx * n + f0[node_idx], b_idx * n + f1[node_idx]])
+    refs = np.bincount(keys, minlength=n_b * n)
+    mkeys = b_idx * n + node_idx
+    freed_mask = refs[mkeys] >= fanout[node_idx]
+    freed = np.bincount(b_idx[freed_mask], minlength=n_b)
+    roots_a = np.asarray(roots, dtype=np.int64)
+    root_pass = refs[np.arange(n_b) * n + roots_a] >= fanout[roots_a]
+    return freed - root_pass.astype(np.int64) + 1
+
+
+def _rewrite_device(aig: Aig, k: int = 4, max_cuts: int = 8) -> Aig:
+    """`rewrite` with batched device truth tables + vectorized MFFC."""
+    from repro.kernels import aig_sim
+
+    cuts = _enumerate_cuts(aig, k=k, max_cuts=max_cuts)
+    fanout = aig.fanout_counts()
+    reach = _reachable(aig)
+
+    # Phase A — precompute: every (node, cut) query in python iteration
+    # order; all decisions below depend only on the original AIG.
+    items: list[tuple[int, list[int]]] = []
+    for n in range(aig.n_pis + 1, aig.n_nodes):
+        if not reach[n]:
+            continue
+        for cut in cuts[n]:
+            if len(cut) < 2 or n in cut:
+                continue
+            items.append((n, sorted(cut)))
+
+    best_for: dict[int, tuple[tuple, list[int]]] = {}
+    if items:
+        prog = aig_sim.compile_aig(aig)
+        members = _cone_matrix(aig, [n for n, _ in items], [s for _, s in items])
+        tts = aig_sim.eval_tts(
+            aig,
+            [((lit(n),), sup) for n, sup in items],
+            program=prog,
+            members=members,
+        )
+        old_costs = _mffc_sizes_batch(aig, [n for n, _ in items], members, fanout)
+        best_gain: dict[int, int] = {}
+        for (n, sup), (tt,), old_cost in zip(items, tts, old_costs):
+            cost, plan = synth_plan(tt, len(sup))
+            gain = int(old_cost) - cost
+            if gain > best_gain.get(n, 0):
+                best_gain[n] = gain
+                best_for[n] = (plan, sup)
+
+    # Phase B — sequential rebuild, replaying the python path's choices.
+    new = Aig(aig.n_pis, name=aig.name)
+    mapping: dict[int, int] = {0: CONST0}
+    for i in range(1, 1 + aig.n_pis):
+        mapping[i] = lit(i)
+    for n in range(aig.n_pis + 1, aig.n_nodes):
+        if not reach[n]:
+            continue
+        fa, fb = aig.fanins(n)
+        mapping[n] = new.g_and(
+            mapping[fa >> 1] ^ (fa & 1), mapping[fb >> 1] ^ (fb & 1)
+        )
+        hit = best_for.get(n)
+        if hit is not None:
+            plan, support = hit
+            mapping[n] = build_plan(new, plan, [mapping[m] for m in support])
+    for p in aig.pos:
+        new.add_po(mapping[lit_node(p)] ^ lit_phase(p))
+    out = new.clone()
+    return out if out.n_ands <= aig.n_ands else aig
+
+
+def _refactor_device(aig: Aig, max_leaves: int = 10) -> Aig:
+    """`refactor` with batched device truth tables + vectorized MFFC.
+
+    The `_factor_cubes` trial must stay in the sequential phase: rejected
+    trials still leave strashed nodes in the new AIG, which later nodes'
+    ``added`` accounting observes — so only the cone/tt/ISOP/estimate work
+    moves to the precompute phase.
+    """
+    from repro.kernels import aig_sim
+
+    fanout = aig.fanout_counts()
+    reach = _reachable(aig)
+    lv = aig.levels()
+
+    cand_items: list[tuple[int, list[int]]] = []
+    for n in range(aig.n_pis + 1, aig.n_nodes):
+        if not reach[n]:
+            continue
+        if fanout[n] < 2 and lv[n] % 3 != 0:
+            continue
+        leaves = _reconv_cut(aig, n, max_leaves)
+        if len(leaves) < 3 or n in leaves:
+            continue
+        if len(leaves) > 12:
+            continue
+        cand_items.append((n, leaves))
+
+    plans: dict[int, tuple[list[tuple[int, int]], list[int], int]] = {}
+    if cand_items:
+        prog = aig_sim.compile_aig(aig)
+        members = _cone_matrix(
+            aig, [n for n, _ in cand_items], [l for _, l in cand_items]
+        )
+        tts = aig_sim.eval_tts(
+            aig,
+            [((lit(n),), lvs) for n, lvs in cand_items],
+            program=prog,
+            members=members,
+        )
+        old_costs = _mffc_sizes_batch(
+            aig, [n for n, _ in cand_items], members, fanout
+        )
+        for (n, leaves), (tt,), old_cost in zip(cand_items, tts, old_costs):
+            kk = len(leaves)
+            cubes = _isop(tt, _tt_mask(kk), kk)
+            est = sum(bin(p | q).count("1") for p, q in cubes) + max(0, len(cubes) - 1)
+            if est >= int(old_cost) + 2:
+                continue
+            plans[n] = (cubes, leaves, int(old_cost))
+
+    new = Aig(aig.n_pis, name=aig.name)
+    mapping: dict[int, int] = {0: CONST0}
+    for i in range(1, 1 + aig.n_pis):
+        mapping[i] = lit(i)
+    for n in range(aig.n_pis + 1, aig.n_nodes):
+        if not reach[n]:
+            continue
+        fa, fb = aig.fanins(n)
+        mapping[n] = new.g_and(mapping[fa >> 1] ^ (fa & 1), mapping[fb >> 1] ^ (fb & 1))
+        hit = plans.get(n)
+        if hit is None:
+            continue
+        cubes, leaves, old_cost = hit
+        before = new.n_ands
+        cand = _factor_cubes(new, cubes, [mapping[m] for m in leaves])
+        added = new.n_ands - before
+        if added <= old_cost:
+            mapping[n] = cand
+    for p in aig.pos:
+        new.add_po(mapping[lit_node(p)] ^ lit_phase(p))
+    out = new.clone()
+    return out if out.n_ands <= aig.n_ands else aig
+
+
+def _resub_device(aig: Aig, n_words: int = 32, seed: int = 7) -> Aig:
+    """`resub` with device node signatures + round-batched verification.
+
+    The python path verifies each node's candidate list in order and stops
+    at the first match.  Candidate lists are independent across nodes, so
+    rounds preserve that order exactly: round ``i`` verifies the first
+    still-untried candidate of every unresolved node as one batched device
+    call; a node drops out when it matches or exhausts its list.
+    """
+    from repro.kernels import aig_sim
+
+    rng = np.random.default_rng(seed)
+    if aig.n_pis == 0 or aig.n_ands == 0:
+        return aig
+    patterns = rng.integers(0, 1 << 63, size=(aig.n_pis, n_words), dtype=np.int64).astype(np.uint64)
+    prog = aig_sim.compile_aig(aig)
+    sig = aig_sim.node_signatures(aig, patterns, program=prog)
+
+    buckets: dict[bytes, list[int]] = {}
+    for n in range(1, aig.n_nodes):
+        buckets.setdefault(sig[n].tobytes(), []).append(n)
+
+    supports = _supports(aig, cap=14)
+    full = np.uint64(0xFFFFFFFFFFFFFFFF)
+    cand_lists: dict[int, list[tuple[int, bool, list[int]]]] = {}
+    for n in range(aig.n_pis + 1, aig.n_nodes):
+        if supports[n] is None:
+            continue
+        cands = buckets.get(sig[n].tobytes(), [])
+        comp = (sig[n] ^ full).tobytes()
+        cands = [m for m in cands if m < n] + [m for m in buckets.get(comp, []) if m < n]
+        flist: list[tuple[int, bool, list[int]]] = []
+        for m in cands:
+            if supports[m] is None:
+                continue
+            neg = sig[m].tobytes() != sig[n].tobytes()
+            sup = sorted(supports[n] | supports[m])
+            if len(sup) > 14:
+                continue
+            flist.append((m, neg, sup))
+        if flist:
+            cand_lists[n] = flist
+
+    replace: dict[int, int] = {}
+    pos_i = {n: 0 for n in cand_lists}
+    active = sorted(cand_lists)
+    while active:
+        batch = [(n,) + cand_lists[n][pos_i[n]] for n in active]
+        tts = aig_sim.eval_tts(
+            aig,
+            [((lit(n), lit(m)), sup) for n, m, _, sup in batch],
+            program=prog,
+        )
+        nxt: list[int] = []
+        for (n, m, neg, sup), (tt_n, tt_m) in zip(batch, tts):
+            if tt_n == tt_m and not neg:
+                replace[n] = lit(m)
+            elif neg and tt_n == (tt_m ^ _tt_mask(len(sup))):
+                replace[n] = lit_not(lit(m))
+            else:
+                pos_i[n] += 1
+                if pos_i[n] < len(cand_lists[n]):
+                    nxt.append(n)
+        active = nxt
+
+    if not replace:
+        return aig
+    new = Aig(aig.n_pis, name=aig.name)
+    mapping: dict[int, int] = {0: CONST0}
+    for i in range(1, 1 + aig.n_pis):
+        mapping[i] = lit(i)
+    for n in range(aig.n_pis + 1, aig.n_nodes):
+        if n in replace:
+            r = replace[n]
+            mapping[n] = mapping[lit_node(r)] ^ lit_phase(r)
+        else:
+            fa, fb = aig.fanins(n)
+            mapping[n] = new.g_and(mapping[fa >> 1] ^ (fa & 1), mapping[fb >> 1] ^ (fb & 1))
+    for p in aig.pos:
+        new.add_po(mapping[lit_node(p)] ^ lit_phase(p))
+    out = new.clone()
+    return out if out.n_ands <= aig.n_ands else aig
+
+
+# ===========================================================================
 # Recipes — Algorithm I line 3 (CreateAIG)
 # ===========================================================================
 
@@ -663,6 +1009,24 @@ _TRANSFORM_FNS: dict[str, Callable[[Aig], Aig]] = {
     "Rw": rewrite,
     "Rs": resub,
 }
+
+
+def transform_fns(backend: str = "python") -> dict[str, Callable[[Aig], Aig]]:
+    """Transform-name -> callable map for a characterization backend.
+
+    ``balance`` has no truth-table inner loop, so it is shared; the other
+    three dispatch to their `kernels.aig_sim`-batched variants under the
+    ``device`` backend (bit-identical outputs either way).
+    """
+    resolved = resolve_backend(backend)
+    if resolved == "python":
+        return dict(_TRANSFORM_FNS)
+    return {
+        "Ba": balance,
+        "Rf": partial(refactor, backend=resolved),
+        "Rw": partial(rewrite, backend=resolved),
+        "Rs": partial(resub, backend=resolved),
+    }
 
 
 def enumerate_recipes(
@@ -711,14 +1075,26 @@ class RecipeRunner:
     passes, not 65.
     """
 
-    def __init__(self, base: Aig):
+    def __init__(
+        self,
+        base: Aig,
+        backend: str = "python",
+        on_apply: "Callable[[str, str, str, Aig, AigStats | None], None] | None" = None,
+    ):
         self.base = base
+        self.backend = resolve_backend(backend)
+        self._fns = transform_fns(self.backend)
+        #: Called after every *fresh* application (not preloads) with
+        #: (src_fp, transform, out_fp, out AIG, stats-or-None) — the hook
+        #: `characterize_suite` uses for incremental cache persistence.
+        self.on_apply = on_apply
         base_fp = base.fingerprint()
         self._node_fp: dict[tuple[str, ...], str] = {(): base_fp}
         self._store: dict[str, Aig] = {base_fp: base}
         self._applied: dict[tuple[str, str], str] = {}
         self._stats: dict[str, AigStats] = {}
         self.n_applied = 0  # real transform runs (structural misses)
+        self.n_preloaded = 0  # applications installed from the disk cache
 
     # -- DAG resolution ------------------------------------------------------
 
@@ -739,11 +1115,13 @@ class RecipeRunner:
         hit = self._applied.get(key)
         if hit is not None:
             return hit
-        out = _TRANSFORM_FNS[transform](self._store[src_fp])
+        out = self._fns[transform](self._store[src_fp])
         self.n_applied += 1
         out_fp = out.fingerprint()
         self._applied[key] = out_fp
         self._store.setdefault(out_fp, out)
+        if self.on_apply is not None:
+            self.on_apply(src_fp, transform, out_fp, out, None)
         return out_fp
 
     def record(
@@ -757,6 +1135,22 @@ class RecipeRunner:
         self._store.setdefault(out_fp, out)
         if stats is not None:
             self._stats.setdefault(out_fp, stats)
+        if self.on_apply is not None:
+            self.on_apply(src_fp, transform, out_fp, out, stats)
+        return out_fp
+
+    def preload_application(
+        self, src_fp: str, transform: str, out: Aig,
+        stats: AigStats | None = None,
+    ) -> str:
+        """Install a cached application as a warm start: does not count as
+        work (`n_applied`) and does not re-notify ``on_apply``."""
+        out_fp = out.fingerprint()
+        self._applied.setdefault((src_fp, transform), out_fp)
+        self._store.setdefault(out_fp, out)
+        if stats is not None:
+            self._stats.setdefault(out_fp, stats)
+        self.n_preloaded += 1
         return out_fp
 
     def aig_for(self, fp: str) -> Aig:
@@ -792,6 +1186,22 @@ def apply_recipe(aig: Aig, recipe: Sequence[str]) -> Aig:
 
 def _recipe_key(recipe: tuple[str, ...]) -> str:
     return ",".join(recipe)
+
+
+def _atomic_json(path: Path, payload: dict) -> None:
+    """Write JSON via tempfile + ``os.replace`` (crash/concurrency safe)."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 class CharacterizationCache:
@@ -840,8 +1250,6 @@ class CharacterizationCache:
         """Merge ``cha`` into the circuit's cache file (atomic replace)."""
         merged = self.load(circuit_fp)
         merged.update(cha)
-        path = self._path(circuit_fp)
-        path.parent.mkdir(parents=True, exist_ok=True)
         payload = dict(
             transform_version=TRANSFORM_VERSION,
             circuit=circuit_fp,
@@ -849,17 +1257,93 @@ class CharacterizationCache:
                 _recipe_key(r): s.to_dict() for r, s in sorted(merged.items())
             },
         )
-        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        _atomic_json(self._path(circuit_fp), payload)
+
+    # -- per-application persistence (partial warm starts) -------------------
+    #
+    # Recipe-endpoint stats alone only help once a whole circuit finished:
+    # a run that dies mid-suite redoes every transform.  The application
+    # index below persists each (src fingerprint, transform) -> output as
+    # soon as it is computed, with the output AIG *structure* stored once
+    # per distinct fingerprint — the next run preloads them into the
+    # `RecipeRunner` memo and only runs the applications it never reached.
+
+    def _apps_path(self, circuit_fp: str) -> Path:
+        return self.root / f"v{TRANSFORM_VERSION}" / f"{circuit_fp}.apps.json"
+
+    def _aig_path(self, fp: str) -> Path:
+        return self.root / f"v{TRANSFORM_VERSION}" / "aigs" / f"{fp}.json"
+
+    def load_applications(
+        self, circuit_fp: str
+    ) -> dict[tuple[str, str], tuple[str, AigStats | None]]:
+        """Persisted applications for a circuit:
+        ``{(src_fp, transform): (out_fp, stats-or-None)}``."""
         try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f)
-            os.replace(tmp, path)
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+            with open(self._apps_path(circuit_fp)) as f:
+                raw = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+        if raw.get("transform_version") != TRANSFORM_VERSION:
+            return {}
+        out: dict[tuple[str, str], tuple[str, AigStats | None]] = {}
+        for key, d in raw.get("apps", {}).items():
+            src_fp, _, transform = key.rpartition(":")
+            if not src_fp or transform not in TRANSFORM_NAMES:
+                continue
+            stats = AigStats.from_dict(d["stats"]) if d.get("stats") else None
+            out[(src_fp, transform)] = (d["out"], stats)
+        return out
+
+    def load_aig(self, fp: str) -> Aig | None:
+        """A persisted AIG structure by fingerprint (None on miss/corruption)."""
+        try:
+            with open(self._aig_path(fp)) as f:
+                raw = json.load(f)
+            aig = Aig.from_dict(raw)
+        except (OSError, json.JSONDecodeError, KeyError, ValueError, IndexError):
+            return None
+        return aig if aig.fingerprint() == fp else None
+
+    def store_application(
+        self,
+        circuit_fp: str,
+        src_fp: str,
+        transform: str,
+        out: Aig,
+        stats: AigStats | None = None,
+    ) -> None:
+        """Persist one transform application and its output structure.
+
+        The AIG file is written first so a crash between the two writes
+        leaves at worst an unreferenced structure, never a dangling index
+        entry."""
+        out_fp = out.fingerprint()
+        aig_path = self._aig_path(out_fp)
+        if not aig_path.exists():
+            _atomic_json(aig_path, out.to_dict())
+        apps_path = self._apps_path(circuit_fp)
+        try:
+            with open(apps_path) as f:
+                raw = json.load(f)
+            if raw.get("transform_version") != TRANSFORM_VERSION:
+                raw = {}
+        except (OSError, json.JSONDecodeError):
+            raw = {}
+        apps = raw.get("apps", {})
+        entry = apps.get(f"{src_fp}:{transform}", {})
+        apps[f"{src_fp}:{transform}"] = dict(
+            out=out_fp,
+            stats=stats.to_dict() if stats is not None else entry.get("stats"),
+        )
+        _atomic_json(
+            apps_path,
+            dict(
+                transform_version=TRANSFORM_VERSION,
+                circuit=circuit_fp,
+                apps=apps,
+            ),
+        )
 
 
 def _as_cache(
@@ -878,20 +1362,24 @@ def _as_cache(
 def _characterize_task(task):
     """Process-pool worker: apply one transform and characterize the result.
 
-    ``task`` = (circuit name, input fingerprint, transform, input Aig).
-    Returns (name, input fingerprint, transform, result Aig, AigStats) —
-    the parent installs it via `RecipeRunner.record`.
+    ``task`` = (circuit name, input fingerprint, transform, input Aig,
+    backend).  Returns (name, input fingerprint, transform, result Aig,
+    AigStats) — the parent installs it via `RecipeRunner.record`.
     """
-    name, src_fp, transform, aig = task
-    out = _TRANSFORM_FNS[transform](aig)
+    name, src_fp, transform, aig, backend = task
+    out = transform_fns(backend)[transform](aig)
     return name, src_fp, transform, out, out.characterize()
 
 
-def _resolve_jobs(n_jobs: int | None) -> int:
+def _resolve_jobs(n_jobs: int | None, backend: str = "python") -> int:
     if n_jobs is None:
         env = os.environ.get("REPRO_CHA_JOBS")
         if env is not None:
             n_jobs = int(env)
+        elif backend == "device":
+            # The device path is already batched; spawn workers would each
+            # pay a fresh jax import + jit warm-up, so default to serial.
+            n_jobs = 1
         else:
             n_jobs = min(4, os.cpu_count() or 1)
     if n_jobs > 1 and not _spawn_safe():
@@ -914,6 +1402,7 @@ def characterize_suite(
     recipes: Sequence[tuple[str, ...]] | None = None,
     cache: "CharacterizationCache | str | os.PathLike | None" = None,
     n_jobs: int | None = None,
+    backend: str = "auto",
 ) -> dict[str, dict[tuple[str, ...], AigStats]]:
     """Front half of Algorithm I (lines 3-6) over a whole benchmark suite.
 
@@ -938,12 +1427,21 @@ def characterize_suite(
     The pool uses the ``spawn`` start method: characterization is pure
     numpy/python, but the parent may have jax/XLA threads loaded (the
     batched back half), and forking such a process is unsafe.
+
+    ``backend`` selects the transform implementation (`resolve_backend`):
+    ``device`` batches the truth-table inner loops through
+    `kernels.aig_sim` (bit-identical outputs, so cache entries are shared
+    across backends); the default ``auto`` uses it whenever jax imports.
+    Cache-backed runs also persist every *application* as it completes
+    (`CharacterizationCache.store_application`), so a run that dies
+    mid-suite warm-starts from the applications it already did.
     """
     recipes = [
         tuple(r) for r in (recipes if recipes is not None else enumerate_recipes())
     ]
     wanted = list(dict.fromkeys([()] + recipes))
     cache = _as_cache(cache)
+    backend = resolve_backend(backend)
 
     out: dict[str, dict[tuple[str, ...], AigStats]] = {}
     runners: dict[str, RecipeRunner] = {}
@@ -958,10 +1456,23 @@ def characterize_suite(
             continue
         if cache is not None:
             cache.misses += 1
-        runners[name] = RecipeRunner(rtl)
+        runner = RecipeRunner(rtl, backend=backend)
+        if cache is not None:
+            # Partial warm start: replay persisted applications into the
+            # structural memo, then persist every fresh one incrementally.
+            for (src_fp, t), (out_fp, st) in cache.load_applications(
+                fps[name]
+            ).items():
+                out_aig = cache.load_aig(out_fp)
+                if out_aig is not None:
+                    runner.preload_application(src_fp, t, out_aig, st)
+            runner.on_apply = partial(
+                _persist_application, cache, fps[name], runner
+            )
+        runners[name] = runner
 
     if runners:
-        _run_suite_dag(runners, wanted, n_jobs)
+        _run_suite_dag(runners, wanted, n_jobs, backend)
         for name, runner in runners.items():
             cha = {r: runner.stats(r) for r in wanted}
             out[name] = cha
@@ -972,10 +1483,34 @@ def characterize_suite(
     return {name: out[name] for name in circuits}
 
 
+def _persist_application(
+    cache: CharacterizationCache,
+    circuit_fp: str,
+    runner: RecipeRunner,
+    src_fp: str,
+    transform: str,
+    out_fp: str,
+    out: Aig,
+    stats: AigStats | None,
+) -> None:
+    """`RecipeRunner.on_apply` hook: persist the application immediately.
+
+    Characterizes the output if the pool didn't already, seeding the
+    runner's stats memo so `RecipeRunner.stats` never repeats the work.
+    """
+    if stats is None:
+        stats = runner._stats.get(out_fp)
+        if stats is None:
+            stats = out.characterize()
+        runner._stats.setdefault(out_fp, stats)
+    cache.store_application(circuit_fp, src_fp, transform, out, stats)
+
+
 def _run_suite_dag(
     runners: Mapping[str, RecipeRunner],
     wanted: Sequence[tuple[str, ...]],
     n_jobs: int | None,
+    backend: str = "python",
 ) -> None:
     """Evaluate every prefix node of ``wanted`` in all runners on an
     as-completed futures scheduler.
@@ -993,7 +1528,7 @@ def _run_suite_dag(
     nodes = prefix_nodes(wanted)
     if not nodes:
         return
-    n_jobs = _resolve_jobs(n_jobs)
+    n_jobs = _resolve_jobs(n_jobs, backend)
     if n_jobs == 1:
         # Serial: the memoized DAG walk itself (depth order from
         # prefix_nodes guarantees parents resolve first).
@@ -1036,7 +1571,7 @@ def _run_suite_dag(
             waiting[key].append(node)
             return
         waiting[key] = [node]
-        tasks.append((name, src_fp, t, runner.aig_for(src_fp)))
+        tasks.append((name, src_fp, t, runner.aig_for(src_fp), backend))
 
     with ProcessPoolExecutor(
         max_workers=n_jobs, mp_context=mp.get_context("spawn")

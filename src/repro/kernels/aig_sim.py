@@ -1,0 +1,793 @@
+"""Device-resident AIG cone simulation — the front half's bit-packed engine.
+
+The transforms (core/transforms.py) spend their time simulating small
+cones: exact truth tables over a cut's leaves (rewrite / refactor /
+resub verification) and whole-graph random signatures (resub).  The
+python path computes these one cone at a time on arbitrary-precision
+ints; this module moves them onto the device as *batched bit-packed
+simulation*, reusing the instruction-stream layout of
+``kernels/cim_logic.py``:
+
+  * `compile_aig` lowers the (already topologically ordered) AIG once
+    into a ``[kind, a_row, b_row, out_row]`` int32 instruction stream
+    where ``kind`` packs the two fanin complement bits
+    (``out = (a ^ pa) & (b ^ pb)``) and rows are node indices — plus a
+    *wave-packed* variant (independent same-level nodes grouped so one
+    scan step evaluates a whole wave) and the per-node AIG levels.
+  * `eval_tts` evaluates a *batch* of (roots, support) queries.  On the
+    jnp engine each word-tier's queries are assembled into chunked
+    **mega-programs**: every query's cone is laid out in a shared flat
+    row space (row 0 = const0, then per query its support rows — pinned
+    to elementary truth tables, exactly `Aig.truth_table`'s semantics —
+    followed by its cone rows), and the concatenated instructions are
+    wave-packed by global AIG level.  Device work is therefore
+    proportional to the *useful* cone work, not batch x whole-graph.
+  * `node_signatures` runs the whole-graph wave stream over random
+    uint64 pattern words (viewed as uint32 lanes) — bit-identical to
+    ``transforms._node_signatures``.
+
+Two device engines share the host wrapper: the pure-jnp ``lax.scan``
+mega-program engine (the CPU-CI workhorse — Pallas interpret mode
+would crawl) and a Pallas kernel with the cim_logic VMEM-scratch
+layout (one grid step per query against the full graph, the scratch is
+the "SRAM array" holding every node's packed table).  ``engine="auto"``
+picks Pallas on TPU, jnp elsewhere; both are bit-exact against the
+python-int reference, which CI and the property tests enforce.
+
+Shape discipline: queries bucket into word tiers (k <= 5 / 10 / 14
+support vars -> 1 / 32 / 512 uint32 words); mega-program chunks are
+bounded by a per-tier instruction budget and padded to pow2 shapes so
+the jit cache stays small.  Queries wider than `DEVICE_MAX_VARS` take
+the host bigint path on the jnp engine — at 512 words per table
+CPython's limb loops already run at memory speed.  `_jax_setup`
+enables jax's persistent compilation cache (``REPRO_JAX_CACHE[_DIR]``)
+so only the first process on a machine pays the XLA compiles — the
+cross-process cold-start cost this module exists to kill.  A
+`TRACE_COUNTS` counter (same idiom as core/batch.py) lets tests pin
+the trace count.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.aig import Aig, _elementary_int, lit_node, lit_phase
+
+#: Traced-call counters (incremented inside the traced function bodies, so
+#: they count *compiles*, not calls) — same discipline as core/batch.py.
+TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def trace_counts() -> dict[str, int]:
+    """Snapshot of the jit trace counters (for tests / benchmarks)."""
+    return dict(TRACE_COUNTS)
+
+
+# (max vars, uint32 words) shape tiers for truth-table queries.  A query
+# with k support vars lands in the smallest tier with 32 * words >= 2**k;
+# its table occupies the low 2**k bits and the host masks the rest off.
+_TIERS: tuple[tuple[int, int], ...] = ((5, 1), (10, 32), (14, 512))
+#: Batch chunk per word tier (bounds the Pallas (chunk, n_pad) pin block).
+_CHUNK = {1: 2048, 32: 128, 512: 16}
+
+#: jnp mega-program shape knobs per word tier: instructions per wave and
+#: the per-chunk instruction budget.  Wider waves amortize the per-step
+#: scan overhead; the budget bounds carry memory and jit-shape diversity.
+_MEGA_WAVE = {1: 1024, 32: 256}
+_MEGA_BUDGET = {1: 1 << 17, 32: 1 << 14}
+#: Queries with more support vars than this take the host bigint path on
+#: the jnp engine: at 512 words per table, CPython's big-int AND/XOR (a C
+#: loop over limbs) is already at memory speed and the device round trip
+#: cannot win.  The Pallas engine keeps them (TPU lanes don't care).
+DEVICE_MAX_VARS = 10
+
+MAX_VARS = _TIERS[-1][0]
+
+
+def jax_available() -> bool:
+    try:
+        import jax  # noqa: F401
+    except Exception:  # pragma: no cover - environment without jax
+        return False
+    return True
+
+
+_JAX_SETUP_DONE = False
+
+
+def _jax_setup() -> None:
+    """One-time jax configuration for the characterization kernels.
+
+    Enables the persistent compilation cache (the mega-program engine
+    compiles a few dozen shape buckets; without the cache every fresh
+    process pays ~10 s of XLA compiles, *the* cold-start cost this
+    module exists to kill).  ``REPRO_JAX_CACHE=0`` disables it;
+    ``REPRO_JAX_CACHE_DIR`` overrides the location.
+    """
+    global _JAX_SETUP_DONE
+    if _JAX_SETUP_DONE:
+        return
+    _JAX_SETUP_DONE = True
+    import os
+
+    if os.environ.get("REPRO_JAX_CACHE", "1") == "0":
+        return
+    cache_dir = os.environ.get("REPRO_JAX_CACHE_DIR") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro_jax_cache"
+    )
+    try:  # pragma: no cover - depends on jax version/backend support
+        import jax
+
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        try:
+            jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        except Exception:
+            pass
+    except Exception:
+        pass
+
+
+#: Instructions per wave of the level-packed stream (see `compile_aig`).
+WAVE_WIDTH = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AigProgram:
+    """One AIG lowered to the shared instruction stream.
+
+    ``instrs[i] = [kind, a_row, b_row, out_row]`` evaluates node
+    ``n_pis + 1 + i``; rows are node indices (node 0 = const0, nodes
+    1..n_pis = PIs).  ``kind`` = pa | (pb << 1) — the fanin complement
+    bits.  Rows/instructions are padded to ``n_pad`` (power of two);
+    padding instructions write the scratch row ``n_pad - 1``.
+
+    ``waves`` is the same stream *level-packed* for the jnp engine:
+    nodes grouped by AIG level (same-level nodes never depend on each
+    other), each level split into `WAVE_WIDTH`-wide waves, so one scan
+    step evaluates up to 128 independent nodes and the scan length is
+    ~depth, not ~n_nodes.  Wave count pads to a power of two.
+    """
+
+    instrs: np.ndarray  # (n_pad, 4) int32 — flat, for the Pallas engine
+    waves: np.ndarray  # (n_waves_pad, wave_w, 4) int32 — jnp sig engine
+    lv: np.ndarray  # (n_nodes,) int64 — AIG levels (mega wave packing)
+    n_nodes: int
+    n_pis: int
+    n_pad: int
+
+
+def _next_pow2(x: int, floor: int = 3) -> int:
+    return 1 << max(floor, (x - 1).bit_length())
+
+
+def compile_aig(aig: Aig) -> AigProgram:
+    """Lower an AIG to the level-ordered instruction stream (host, once)."""
+    n_nodes = aig.n_nodes
+    n_pad = _next_pow2(n_nodes + 1)
+    f0 = np.asarray(aig._f0, dtype=np.int64)
+    f1 = np.asarray(aig._f1, dtype=np.int64)
+    instrs = np.zeros((n_pad, 4), dtype=np.int32)
+    # No-op padding: AND of const0 with itself, parked in the scratch row.
+    instrs[:, 3] = n_pad - 1
+    lo = aig.n_pis + 1
+    n_ands = n_nodes - lo
+    if n_ands > 0:
+        a, b = f0[lo:], f1[lo:]
+        instrs[:n_ands, 0] = (a & 1) | ((b & 1) << 1)
+        instrs[:n_ands, 1] = a >> 1
+        instrs[:n_ands, 2] = b >> 1
+        instrs[:n_ands, 3] = np.arange(lo, n_nodes)
+
+    # Pack into waves by capacity-constrained ASAP list scheduling: a node
+    # goes into the first non-full wave after both fanins' waves.  The wave
+    # width adapts to the graph's average level width (deep carry-chain
+    # circuits get narrow waves), so the stream stays *dense* — total slots
+    # ~ n_ands, steps ~ depth — and the scan's memory traffic is bounded by
+    # useful work, not padding.  Padding slots replay the no-op (scratch-row
+    # write of const0 — duplicates within a wave all store the same value).
+    lv = np.asarray(aig.levels(), dtype=np.int64)
+    if n_ands > 0:
+        depth = max(1, int(lv.max()))
+        wave_w = _next_pow2(min(WAVE_WIDTH, max(8, -(-n_ands // depth))))
+        wave_of = np.full(n_nodes, -1, dtype=np.int64)
+        fill: list[int] = []
+        wave_id = np.zeros(n_ands, dtype=np.int64)
+        col = np.zeros(n_ands, dtype=np.int64)
+        for i in range(n_ands):
+            node = lo + i
+            w = max(wave_of[f0[node] >> 1], wave_of[f1[node] >> 1]) + 1
+            while w < len(fill) and fill[w] >= wave_w:
+                w += 1
+            while w >= len(fill):
+                fill.append(0)
+            wave_of[node] = w
+            wave_id[i] = w
+            col[i] = fill[w]
+            fill[w] += 1
+        n_waves = len(fill)
+    else:
+        wave_w = 8
+        n_waves = 0
+    n_waves_pad = _next_pow2(n_waves + 1, floor=1)
+    waves = np.zeros((n_waves_pad, wave_w, 4), dtype=np.int32)
+    waves[:, :, 3] = n_pad - 1
+    if n_ands > 0:
+        waves[wave_id, col] = instrs[:n_ands]
+    return AigProgram(
+        instrs=instrs,
+        waves=waves,
+        lv=lv,
+        n_nodes=n_nodes,
+        n_pis=aig.n_pis,
+        n_pad=n_pad,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _elem_words(k_max: int) -> np.ndarray:
+    """Elementary truth tables of ``k_max`` vars as (k_max, words) uint32,
+    LSB-first pattern order — `Aig._elementary_int` bit-packed."""
+    n_pat = 1 << k_max
+    words = max(1, n_pat // 32)
+    out = np.zeros((k_max, words), dtype=np.uint32)
+    for i in range(k_max):
+        v = _elementary_int(i, k_max)
+        out[i] = np.frombuffer(v.to_bytes(words * 4, "little"), dtype="<u4")
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _dev_elem(k_max: int):
+    """`_elem_words(k_max)` already resident on the device."""
+    import jax.numpy as jnp
+
+    return jnp.asarray(_elem_words(k_max))
+
+
+def words_to_int(words: np.ndarray) -> int:
+    """Little-endian uint32 words -> python int (LSB-first patterns)."""
+    return int.from_bytes(np.ascontiguousarray(words, dtype="<u4").tobytes(), "little")
+
+
+def _tier_for(k: int) -> tuple[int, int]:
+    for k_max, w in _TIERS:
+        if k <= k_max:
+            return k_max, w
+    raise ValueError(f"eval_tts limited to {MAX_VARS} support vars, got {k}")
+
+
+# ---------------------------------------------------------------------------
+# jnp engine — lax.scan over wave-packed instruction streams
+# ---------------------------------------------------------------------------
+
+_JNP_MEGA = None
+_JNP_SIG = None
+
+
+def _jnp_mega_fn():
+    global _JNP_MEGA
+    if _JNP_MEGA is not None:
+        return _JNP_MEGA
+    _jax_setup()
+    import jax
+    import jax.numpy as jnp
+
+    def eval_mega(waves, pin_rows, elem, rootp):
+        """Evaluate one mega-program (many concatenated cone programs).
+
+        waves (L,M,4) i32 over a flat row space; pin_rows (N,) i32
+        var-index-or--1; elem (K,W) u32; rootp (Q,) i32 packs each root
+        query as ``row << 1 | phase``.  Returns (Q,W) u32.  Support rows
+        hold elementary tables and are never written (cone membership
+        excludes pinned nodes), so the step body is just
+        gather-AND-scatter.
+        """
+        TRACE_COUNTS["aig_eval"] += 1
+        vals0 = jnp.where(
+            (pin_rows >= 0)[:, None],
+            elem[jnp.clip(pin_rows, 0, elem.shape[0] - 1)],
+            jnp.uint32(0),
+        )  # (N, W)
+        full = jnp.uint32(0xFFFFFFFF)
+
+        def step(vals, ins):
+            # ins (M, 4): one wave of independent instructions.
+            kind, a, b, o = ins[:, 0], ins[:, 1], ins[:, 2], ins[:, 3]
+            va = vals[a] ^ (full * (kind & 1).astype(jnp.uint32))[:, None]
+            vb = vals[b] ^ (full * ((kind >> 1) & 1).astype(jnp.uint32))[:, None]
+            return vals.at[o].set(va & vb), None
+
+        vals, _ = jax.lax.scan(step, vals0, waves)
+        phase = (full * (rootp & 1).astype(jnp.uint32))[:, None]
+        return vals[rootp >> 1] ^ phase
+
+    _JNP_MEGA = jax.jit(eval_mega)
+    return _JNP_MEGA
+
+
+def _jnp_sig_fn():
+    global _JNP_SIG
+    if _JNP_SIG is not None:
+        return _JNP_SIG
+    _jax_setup()
+    import jax
+    import jax.numpy as jnp
+
+    def sig_eval(waves, vals0):
+        """waves (L,M,4) i32; vals0 (N,W) u32 with PI rows pre-placed."""
+        TRACE_COUNTS["aig_sig"] += 1
+        full = jnp.uint32(0xFFFFFFFF)
+
+        def step(vals, ins):
+            kind, a, b, o = ins[:, 0], ins[:, 1], ins[:, 2], ins[:, 3]
+            va = vals[a] ^ (full * (kind & 1).astype(jnp.uint32))[:, None]
+            vb = vals[b] ^ (full * ((kind >> 1) & 1).astype(jnp.uint32))[:, None]
+            return vals.at[o].set(va & vb), None
+
+        vals, _ = jax.lax.scan(step, vals0, waves)
+        return vals
+
+    _JNP_SIG = jax.jit(sig_eval)
+    return _JNP_SIG
+
+
+# ---------------------------------------------------------------------------
+# Pallas engine — cim_logic's VMEM-scratch layout, one grid step per query
+# ---------------------------------------------------------------------------
+
+_PALLAS_EVAL = None
+
+
+def _pallas_fn():
+    global _PALLAS_EVAL
+    if _PALLAS_EVAL is not None:
+        return _PALLAS_EVAL
+    _jax_setup()
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(instr_ref, pin_ref, elem_ref, rootp_ref, out_ref, scratch_ref,
+               *, n_instr: int, n_roots: int):
+        n_rows, n_words = scratch_ref.shape
+
+        def init_row(i, _):
+            pv = pin_ref[0, i]
+            erow = pl.load(
+                elem_ref, (pl.dslice(jnp.maximum(pv, 0), 1), slice(None))
+            )
+            row = jnp.where(pv >= 0, erow, jnp.zeros_like(erow))
+            pl.store(scratch_ref, (pl.dslice(i, 1), slice(None)), row)
+            return 0
+
+        jax.lax.fori_loop(0, n_rows, init_row, 0)
+
+        def step(i, _):
+            kind = instr_ref[i, 0]
+            a = instr_ref[i, 1]
+            b = instr_ref[i, 2]
+            o = instr_ref[i, 3]
+            va = pl.load(scratch_ref, (pl.dslice(a, 1), slice(None)))
+            vb = pl.load(scratch_ref, (pl.dslice(b, 1), slice(None)))
+            va = jnp.where((kind & 1) == 1, ~va, va)
+            vb = jnp.where(((kind >> 1) & 1) == 1, ~vb, vb)
+            res = va & vb
+            old = pl.load(scratch_ref, (pl.dslice(o, 1), slice(None)))
+            res = jnp.where(pin_ref[0, o] >= 0, old, res)
+            pl.store(scratch_ref, (pl.dslice(o, 1), slice(None)), res)
+            return 0
+
+        jax.lax.fori_loop(0, n_instr, step, 0)
+
+        def gather(j, _):
+            r = rootp_ref[0, j]
+            ph = rootp_ref[0, n_roots + j]
+            v = pl.load(scratch_ref, (pl.dslice(r, 1), slice(None)))
+            v = jnp.where(ph == 1, ~v, v)
+            pl.store(out_ref, (slice(None), pl.dslice(j * n_words, n_words)), v)
+            return 0
+
+        jax.lax.fori_loop(0, n_roots, gather, 0)
+
+    @functools.partial(
+        jax.jit, static_argnames=("n_roots", "interpret")
+    )
+    def eval_batch(instrs, pin, elem, rootp, n_roots: int, interpret: bool):
+        TRACE_COUNTS["aig_eval_pallas"] += 1
+        n_b, n_rows = pin.shape
+        n_words = elem.shape[1]
+        out = pl.pallas_call(
+            functools.partial(
+                kernel, n_instr=instrs.shape[0], n_roots=n_roots
+            ),
+            grid=(n_b,),
+            in_specs=[
+                pl.BlockSpec(instrs.shape, lambda b: (0, 0)),
+                pl.BlockSpec((1, n_rows), lambda b: (b, 0)),
+                pl.BlockSpec(elem.shape, lambda b: (0, 0)),
+                pl.BlockSpec((1, 2 * n_roots), lambda b: (b, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, n_roots * n_words), lambda b: (b, 0)),
+            out_shape=jax.ShapeDtypeStruct(
+                (n_b, n_roots * n_words), jnp.int32
+            ),
+            scratch_shapes=[_vmem((n_rows, n_words), jnp.int32)],
+            interpret=interpret,
+        )(instrs, pin, elem, rootp)
+        return out
+
+    _PALLAS_EVAL = eval_batch
+    return _PALLAS_EVAL
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _resolve_engine(engine: str) -> str:
+    if engine == "auto":
+        import jax
+
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if engine not in ("jnp", "pallas"):
+        raise ValueError(f"unknown aig_sim engine {engine!r}")
+    return engine
+
+
+# ---------------------------------------------------------------------------
+# Host API
+# ---------------------------------------------------------------------------
+
+
+def _cone_members(
+    aig: Aig,
+    items: Sequence[tuple[Sequence[int], Sequence[int]]],
+    idxs: Sequence[int],
+) -> np.ndarray:
+    """(len(idxs), n_nodes) bool: AND nodes in each query's pinned cone(s).
+
+    Descending-index scan (fanins always have smaller indices): a node
+    active in a query (visited, not a leaf) marks both fanin nodes.
+    Multi-root queries seed every root's node, so one row covers the
+    union cone (resub's (n, m) pairs).
+    """
+    n = aig.n_nodes
+    n_pis = aig.n_pis
+    f0 = np.asarray(aig._f0, dtype=np.int64)
+    f1 = np.asarray(aig._f1, dtype=np.int64)
+    # (n_nodes, batch) layout: the scan touches whole node rows, which
+    # are contiguous this way round (the (B, n) layout strides by n per
+    # element and is several times slower).
+    vis = np.zeros((n, len(idxs)), dtype=bool)
+    leaf = np.zeros((n, len(idxs)), dtype=bool)
+    hi = n_pis
+    for row, i in enumerate(idxs):
+        roots, support = items[i]
+        leaf[list(support), row] = True
+        for rl in roots:
+            r = rl >> 1
+            vis[r, row] = True
+            if r > hi:
+                hi = r
+    for node in range(hi, n_pis, -1):
+        act = vis[node] & ~leaf[node]
+        if not act.any():
+            continue
+        vis[f0[node] >> 1][act] = True
+        vis[f1[node] >> 1][act] = True
+    members = vis & ~leaf
+    members[: n_pis + 1] = False
+    return np.ascontiguousarray(members.T)
+
+
+def _eval_mega_tier(
+    aig: Aig,
+    prog: AigProgram,
+    items: Sequence[tuple[Sequence[int], Sequence[int]]],
+    idxs: list[int],
+    w: int,
+    mem: np.ndarray,
+    results: list,
+) -> None:
+    """Run one word tier's queries as mega-programs on the jnp engine.
+
+    Each chunk concatenates the per-query cone programs into one flat
+    row space (row 0 = const0, then per query: k support rows pinned to
+    elementary tables followed by its cone rows in topo order), so
+    device work is proportional to the *useful* cone work — not to
+    batch × whole-graph as a lock-step layout would be.  Instructions
+    are wave-packed by global AIG level (fanins always have strictly
+    smaller levels, and cross-query instructions are independent), which
+    keeps waves dense: scan length ~ total instrs / wave width.
+    """
+    import jax.numpy as jnp
+
+    k_max = next(km for km, tw in _TIERS if tw == w)
+    dev_elem = _dev_elem(k_max)
+    f0 = np.asarray(aig._f0, dtype=np.int64)
+    f1 = np.asarray(aig._f1, dtype=np.int64)
+    sizes = mem.sum(axis=1).astype(np.int64)
+    budget = _MEGA_BUDGET[w]
+    wave_m = _MEGA_WAVE[w]
+    fn = _jnp_mega_fn()
+
+    chunks: list[list[int]] = []
+    cur: list[int] = []
+    acc = 0
+    for pos in range(len(idxs)):
+        s = int(sizes[pos])
+        if cur and acc + s > budget:
+            chunks.append(cur)
+            cur, acc = [], 0
+        cur.append(pos)
+        acc += s
+    if cur:
+        chunks.append(cur)
+
+    import itertools
+
+    for chunk in chunks:
+        if len(chunk) == len(idxs):
+            cm, counts = mem, sizes
+        else:
+            sel = np.asarray(chunk, dtype=np.int64)
+            cm, counts = mem[sel], sizes[sel]
+        it = [items[idxs[p]] for p in chunk]
+        k_b = np.array([len(s) for _, s in it], dtype=np.int64)
+        r_b = np.array([len(r) for r, _ in it], dtype=np.int64)
+        row_base = 1 + np.concatenate(([0], np.cumsum(k_b + counts)[:-1]))
+        n_rows = int(1 + (k_b + counts).sum())
+        n_rows_pad = _next_pow2(n_rows + 1, floor=10)
+        # Support rows: pinned to elementary tables via the pin map.
+        tot_k = int(k_b.sum())
+        sup_nodes = np.fromiter(
+            itertools.chain.from_iterable(s for _, s in it),
+            dtype=np.int64,
+            count=tot_k,
+        )
+        item_of_sup = np.repeat(np.arange(len(it)), k_b)
+        koff = np.concatenate(([0], np.cumsum(k_b)[:-1]))
+        var_idx = np.arange(tot_k) - np.repeat(koff, k_b)
+        sup_rows = row_base[item_of_sup] + var_idx
+        pin_rows = np.full(n_rows_pad, -1, dtype=np.int32)
+        pin_rows[sup_rows] = var_idx
+        # node -> row per query; unmapped nodes fall through to row 0
+        # (const0) — the python path would raise on such a read, and no
+        # caller produces one (cones are closed over their supports).
+        rowmap = np.zeros((len(it), aig.n_nodes), dtype=np.int32)
+        rowmap[item_of_sup, sup_nodes] = sup_rows
+        b_idx, node_idx = np.nonzero(cm)
+        n_waves = 0
+        if len(b_idx):
+            starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+            local = np.arange(len(b_idx)) - np.repeat(starts, counts)
+            cone_rows = row_base[b_idx] + k_b[b_idx] + local
+            rowmap[b_idx, node_idx] = cone_rows
+            f0n = f0[node_idx]
+            f1n = f1[node_idx]
+            kind = (f0n & 1) | ((f1n & 1) << 1)
+            a_row = rowmap[b_idx, f0n >> 1]
+            b_row = rowmap[b_idx, f1n >> 1]
+            instr = np.stack([kind, a_row, b_row, cone_rows], axis=1).astype(
+                np.int32
+            )
+            # Wave-pack by global level, chopping each level into
+            # wave_m-wide groups (same-level instrs never depend).
+            lvn = prog.lv[node_idx]
+            order = np.argsort(lvn, kind="stable")
+            slv = lvn[order]
+            lstarts = np.searchsorted(slv, slv, side="left")
+            pos_in_lv = np.arange(len(order)) - lstarts
+            # (level, sub-group) keys are non-decreasing in `order`, so
+            # consecutive-difference cumsum numbers the waves directly.
+            key = slv * (len(order) + 1) + pos_in_lv // wave_m
+            wid = np.concatenate(([0], np.cumsum(np.diff(key) > 0)))
+            n_waves = int(wid[-1]) + 1
+        n_waves_pad = _next_pow2(n_waves + 1, floor=2)
+        waves = np.zeros((n_waves_pad, wave_m, 4), dtype=np.int32)
+        waves[:, :, 3] = n_rows_pad - 1  # no-op padding: scratch row <- 0
+        if len(b_idx):
+            waves[wid, pos_in_lv % wave_m] = instr[order]
+        # Root queries: one output row per root literal.
+        q_item = np.repeat(np.arange(len(it)), r_b)
+        root_lits = np.fromiter(
+            itertools.chain.from_iterable(r for r, _ in it),
+            dtype=np.int64,
+            count=int(r_b.sum()),
+        )
+        root_rows = rowmap[q_item, root_lits >> 1]
+        n_q = len(root_lits)
+        n_q_pad = _next_pow2(n_q, floor=6)
+        rootp = np.zeros(n_q_pad, dtype=np.int32)
+        rootp[:n_q] = (root_rows.astype(np.int64) << 1) | (root_lits & 1)
+        out = np.asarray(
+            fn(
+                jnp.asarray(waves),
+                jnp.asarray(pin_rows),
+                dev_elem,
+                jnp.asarray(rootp),
+            )
+        )
+        qoff = np.concatenate(([0], np.cumsum(r_b)))
+        if w == 1:
+            flat = out[:n_q, 0].tolist()
+            for bi, p in enumerate(chunk):
+                idx = idxs[p]
+                roots, support = items[idx]
+                mask = (1 << (1 << len(support))) - 1
+                base = int(qoff[bi])
+                results[idx] = tuple(
+                    flat[base + ri] & mask for ri in range(len(roots))
+                )
+        else:
+            buf = np.ascontiguousarray(out[:n_q]).tobytes()
+            nb = w * 4
+            for bi, p in enumerate(chunk):
+                idx = idxs[p]
+                roots, support = items[idx]
+                mask = (1 << (1 << len(support))) - 1
+                base = int(qoff[bi])
+                results[idx] = tuple(
+                    int.from_bytes(
+                        buf[(base + ri) * nb : (base + ri + 1) * nb], "little"
+                    )
+                    & mask
+                    for ri in range(len(roots))
+                )
+
+
+def eval_tts(
+    aig: Aig,
+    items: Sequence[tuple[Sequence[int], Sequence[int]]],
+    engine: str = "auto",
+    program: AigProgram | None = None,
+    members: np.ndarray | None = None,
+) -> list[tuple[int, ...]]:
+    """Batched exact truth tables: ``items[i] = (root_lits, support)``.
+
+    Returns, per item, one python-int truth table per root literal —
+    bit-identical to ``aig.truth_table(root_lit, support)`` (same
+    LSB-first pattern order, same pinned-support semantics).
+
+    On the jnp engine, queries with <= `DEVICE_MAX_VARS` support vars
+    are bucketed by word tier and evaluated as chunked *mega-programs*
+    (see `_eval_mega_tier`); wider queries take the host bigint path,
+    where CPython's limb loops already run at memory speed.  ``members``
+    may supply precomputed cone membership rows aligned with ``items``
+    (callers that already ran an MFFC sweep have them); otherwise
+    membership is derived here with the same descending scan.
+
+    The Pallas engine evaluates every query against the whole graph
+    (one grid step per query, VMEM scratch = the packed node array).
+    """
+    if not items:
+        return []
+    engine = _resolve_engine(engine)
+    prog = program if program is not None else compile_aig(aig)
+    results: list[tuple[int, ...] | None] = [None] * len(items)
+    if engine == "pallas":
+        _eval_pallas(aig, prog, items, results)
+        return results  # type: ignore[return-value]
+
+    tiers: dict[int, list[int]] = {}
+    for idx, (roots, support) in enumerate(items):
+        k = len(support)
+        if k > DEVICE_MAX_VARS:
+            sup = list(support)
+            results[idx] = tuple(aig.truth_table(rl, sup) for rl in roots)
+        else:
+            _, w = _tier_for(k)
+            tiers.setdefault(w, []).append(idx)
+    for w, idxs in tiers.items():
+        if members is not None:
+            mem = members[np.asarray(idxs, dtype=np.int64)]
+        else:
+            mem = _cone_members(aig, items, idxs)
+        _eval_mega_tier(aig, prog, items, idxs, w, mem, results)
+    return results  # type: ignore[return-value]
+
+
+def _eval_pallas(
+    aig: Aig,
+    prog: AigProgram,
+    items: Sequence[tuple[Sequence[int], Sequence[int]]],
+    results: list,
+) -> None:
+    import jax.numpy as jnp
+
+    groups: dict[tuple[int, int], list[int]] = {}
+    for idx, (roots, support) in enumerate(items):
+        _, w = _tier_for(len(support))
+        groups.setdefault((w, len(roots)), []).append(idx)
+
+    for (w, n_roots), idxs in groups.items():
+        k_max = next(km for km, tw in _TIERS if tw == w)
+        elem = _elem_words(k_max)
+        chunk = _CHUNK[w]
+        for lo in range(0, len(idxs), chunk):
+            batch = idxs[lo : lo + chunk]
+            n_b = len(batch)
+            pin = np.full((chunk, prog.n_pad), -1, dtype=np.int32)
+            # Scatter all supports at once: (item row, support node) -> var.
+            sup_nodes = np.concatenate(
+                [np.asarray(items[i][1], dtype=np.int64) for i in batch]
+            )
+            sup_lens = np.array([len(items[i][1]) for i in batch])
+            item_rows = np.repeat(np.arange(n_b), sup_lens)
+            var_idx = np.concatenate([np.arange(l) for l in sup_lens])
+            pin[item_rows, sup_nodes] = var_idx
+            root_lits_a = np.array([items[i][0] for i in batch], dtype=np.int64)
+            roots_a = np.zeros((chunk, n_roots), dtype=np.int32)
+            roots_a[:n_b] = root_lits_a >> 1
+            phase_a = np.zeros((chunk, n_roots), dtype=np.int32)
+            phase_a[:n_b] = root_lits_a & 1
+            rootp = np.concatenate([roots_a, phase_a], axis=1)
+            fn = _pallas_fn()
+            out = fn(
+                jnp.asarray(prog.instrs),
+                jnp.asarray(pin),
+                jnp.asarray(elem.view(np.int32)),
+                jnp.asarray(rootp),
+                n_roots=n_roots,
+                interpret=_pallas_interpret(),
+            )
+            out = np.asarray(out).view(np.uint32)
+            out = out.reshape(chunk, n_roots, w)
+            for bi, idx in enumerate(batch):
+                root_lits, support = items[idx]
+                mask = (1 << (1 << len(support))) - 1
+                results[idx] = tuple(
+                    words_to_int(out[bi, ri]) & mask
+                    for ri in range(len(root_lits))
+                )
+
+
+def _pallas_interpret() -> bool:
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def eval_tt(
+    aig: Aig,
+    root_lit: int,
+    support: Sequence[int],
+    engine: str = "auto",
+    program: AigProgram | None = None,
+) -> int:
+    """Single-query convenience wrapper around `eval_tts`."""
+    return eval_tts(aig, [((root_lit,), list(support))], engine, program)[0][0]
+
+
+def node_signatures(
+    aig: Aig,
+    patterns: np.ndarray,
+    engine: str = "auto",
+    program: AigProgram | None = None,
+) -> np.ndarray:
+    """Per-node random-simulation signatures on the device.
+
+    ``patterns``: (n_pis, n_words) uint64.  Returns (n_nodes, n_words)
+    uint64, bit-identical to ``transforms._node_signatures`` (the uint64
+    words are simulated as pairs of uint32 lanes).
+    """
+    _resolve_engine(engine)  # validate / pick (sig path is jnp on CPU+TPU)
+    prog = program if program is not None else compile_aig(aig)
+    import jax.numpy as jnp
+
+    patterns = np.asarray(patterns, dtype=np.uint64)
+    n_words = patterns.shape[1]
+    vals0 = np.zeros((prog.n_pad, 2 * n_words), dtype=np.uint32)
+    vals0[1 : 1 + prog.n_pis] = patterns.view("<u4")
+    sig_fn = _jnp_sig_fn()
+    out = np.asarray(sig_fn(jnp.asarray(prog.waves), jnp.asarray(vals0)))
+    return np.ascontiguousarray(out[: prog.n_nodes]).view("<u8")

@@ -1,0 +1,313 @@
+"""Bit-packed device AIG simulation vs the python-int reference.
+
+Contracts under test (the front-half device engine of kernels/aig_sim.py):
+
+  * `eval_tts` truth tables are **bit-identical** to `Aig.truth_table`
+    across random AIGs, random reconvergence cones, shuffled support
+    orders, both root phases, multi-root queries, and every word tier —
+    including the host bigint fallback for wide supports;
+  * `node_signatures` matches `transforms._node_signatures` word for
+    word;
+  * repeated same-shape batches never retrace (`aig_sim.trace_counts`);
+  * the Pallas engine (interpret mode on CPU) agrees with the jnp engine
+    and the python path;
+  * the device-backed transforms (`backend="device"`) produce
+    fingerprint-identical AIGs to the python transforms, all the way up
+    through `characterize_suite`;
+  * a `CharacterizationCache` with persisted per-prefix applications
+    warm-starts a *different* recipe set without re-running the shared
+    prefix transforms.
+
+The property suites run under hypothesis when installed; deterministic
+seeded versions of the same assertions always run.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="device AIG simulation needs jax")
+
+from repro.core import circuits as C
+from repro.core import transforms as T
+from repro.core.aig import Aig, lit
+from repro.core.transforms import (
+    CharacterizationCache,
+    characterize_suite,
+    transform_fns,
+)
+from repro.kernels.aig_sim import (
+    DEVICE_MAX_VARS,
+    compile_aig,
+    eval_tt,
+    eval_tts,
+    node_signatures,
+    trace_counts,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs the test extra
+    HAVE_HYPOTHESIS = False
+
+
+def random_aig(rng, n_pis=6, n_ands=60) -> Aig:
+    """Random strashed AIG: each new node ANDs two random prior literals
+    (random phases), so cones reconverge and fold realistically."""
+    aig = Aig(n_pis)
+    lits = [lit(i) for i in range(1, n_pis + 1)]
+    for _ in range(n_ands):
+        i, j = rng.integers(0, len(lits), size=2)
+        la = int(lits[i]) ^ int(rng.integers(2))
+        lb = int(lits[j]) ^ int(rng.integers(2))
+        out = aig.g_and(la, lb)
+        if out > 1:  # skip folds to const
+            lits.append(out)
+    aig.add_po(lits[-1])
+    return aig
+
+
+def random_cone_queries(rng, aig, n_queries, max_leaves=8):
+    """(root_lits, support) items over random reconvergence cuts, with
+    shuffled support order and random root phase."""
+    and_nodes = list(range(aig.n_pis + 1, aig.n_nodes))
+    items = []
+    for _ in range(n_queries):
+        root = int(and_nodes[rng.integers(len(and_nodes))])
+        leaves = T._reconv_cut(aig, root, max_leaves=max_leaves)
+        support = list(leaves)
+        rng.shuffle(support)
+        items.append(((lit(root, int(rng.integers(2))),), support))
+    return items
+
+
+def assert_items_match_python(aig, items, engine="jnp"):
+    got = eval_tts(aig, items, engine=engine)
+    for (roots, support), tts in zip(items, got):
+        for rl, tt in zip(roots, tts):
+            assert tt == aig.truth_table(rl, list(support)), (
+                f"device truth table differs for root {rl} over {support}"
+            )
+
+
+# ---------------------------------------------------------------------------
+# eval_tts parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_eval_tts_matches_python_reference(seed):
+    rng = np.random.default_rng(seed)
+    aig = random_aig(rng, n_pis=6, n_ands=60)
+    items = random_cone_queries(rng, aig, n_queries=24)
+    assert_items_match_python(aig, items)
+
+
+def test_eval_tts_support_order_sensitivity():
+    """Permuting the support must permute the table exactly as the python
+    path does (the variable order IS the table's encoding)."""
+    rng = np.random.default_rng(3)
+    aig = random_aig(rng, n_pis=5, n_ands=40)
+    root = aig.n_nodes - 1
+    leaves = T._reconv_cut(aig, root, max_leaves=5)
+    perms = [list(leaves), list(reversed(leaves))]
+    rng.shuffle(leaves)
+    perms.append(list(leaves))
+    items = [((lit(root),), p) for p in perms]
+    assert_items_match_python(aig, items)
+
+
+def test_eval_tts_multi_root_union_cone():
+    """resub-style queries: several root literals over one shared support
+    (the union cone) come back as one tuple per item."""
+    rng = np.random.default_rng(4)
+    aig = random_aig(rng, n_pis=6, n_ands=50)
+    support = list(range(1, aig.n_pis + 1))
+    and_nodes = list(range(aig.n_pis + 1, aig.n_nodes))
+    items = []
+    for _ in range(8):
+        picks = rng.integers(0, len(and_nodes), size=3)
+        roots = tuple(
+            lit(int(and_nodes[p]), int(rng.integers(2))) for p in picks
+        )
+        items.append((roots, support))
+    assert_items_match_python(aig, items)
+
+
+def test_eval_tts_wide_support_host_fallback():
+    """Supports wider than DEVICE_MAX_VARS take the host bigint path on
+    the jnp engine — same results, mixed freely with device queries."""
+    rng = np.random.default_rng(5)
+    aig = random_aig(rng, n_pis=DEVICE_MAX_VARS + 2, n_ands=80)
+    wide = list(range(1, aig.n_pis + 1))
+    items = [((lit(aig.n_nodes - 1),), wide)]
+    items += random_cone_queries(rng, aig, n_queries=6, max_leaves=5)
+    assert_items_match_python(aig, items)
+
+
+def test_eval_tt_single_query_wrapper():
+    rng = np.random.default_rng(6)
+    aig = random_aig(rng, n_pis=4, n_ands=30)
+    root_lit = lit(aig.n_nodes - 1, 1)
+    support = list(range(1, 5))
+    assert eval_tt(aig, root_lit, support, engine="jnp") == aig.truth_table(
+        root_lit, support
+    )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_pis=st.integers(3, 8),
+        n_ands=st.integers(5, 80),
+    )
+    def test_eval_tts_property(seed, n_pis, n_ands):
+        rng = np.random.default_rng(seed)
+        aig = random_aig(rng, n_pis=n_pis, n_ands=n_ands)
+        if aig.n_ands == 0:
+            return
+        items = random_cone_queries(rng, aig, n_queries=8)
+        assert_items_match_python(aig, items)
+
+
+# ---------------------------------------------------------------------------
+# node signatures
+# ---------------------------------------------------------------------------
+
+
+def test_node_signatures_parity():
+    rng = np.random.default_rng(7)
+    aig = random_aig(rng, n_pis=8, n_ands=100)
+    patterns = rng.integers(
+        0, 1 << 64, size=(aig.n_pis, 2), dtype=np.uint64
+    )
+    got = node_signatures(aig, patterns, engine="jnp")
+    ref = T._node_signatures(aig, patterns)
+    np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# trace-count guards
+# ---------------------------------------------------------------------------
+
+
+def test_eval_trace_count_stable_across_same_shape_batches():
+    rng = np.random.default_rng(8)
+    aig = random_aig(rng, n_pis=6, n_ands=60)
+    items = random_cone_queries(rng, aig, n_queries=16)
+    prog = compile_aig(aig)
+    eval_tts(aig, items, engine="jnp", program=prog)  # may trace
+    after_first = trace_counts().get("aig_eval", 0)
+    eval_tts(aig, items, engine="jnp", program=prog)
+    assert trace_counts().get("aig_eval", 0) == after_first, (
+        "re-running an identical batch retraced the mega-program kernel"
+    )
+
+
+def test_sig_trace_count_stable_across_graphs():
+    """Same wave/word shapes from a *different* AIG must not retrace."""
+    rng = np.random.default_rng(9)
+    a1 = random_aig(rng, n_pis=6, n_ands=60)
+    a2 = random_aig(rng, n_pis=6, n_ands=60)
+    pats = rng.integers(0, 1 << 64, size=(6, 2), dtype=np.uint64)
+    node_signatures(a1, pats, engine="jnp")
+    before = trace_counts().get("aig_sig", 0)
+    p1, p2 = compile_aig(a1), compile_aig(a2)
+    if p1.waves.shape == p2.waves.shape and p1.n_pad == p2.n_pad:
+        node_signatures(a2, pats, engine="jnp")
+        assert trace_counts().get("aig_sig", 0) == before
+    node_signatures(a1, pats, engine="jnp")
+    assert trace_counts().get("aig_sig", 0) == before
+
+
+# ---------------------------------------------------------------------------
+# Pallas engine (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_pallas_engine_matches_python():
+    rng = np.random.default_rng(10)
+    aig = random_aig(rng, n_pis=4, n_ands=16)
+    items = random_cone_queries(rng, aig, n_queries=3, max_leaves=4)
+    assert_items_match_python(aig, items, engine="pallas")
+
+
+# ---------------------------------------------------------------------------
+# transform / suite parity, device vs python
+# ---------------------------------------------------------------------------
+
+
+TRANSFORM_TEST_CIRCUITS = {
+    "adder-8": lambda: C.gen_adder(8),
+    "max-8x4": lambda: C.gen_max(8, 4),
+}
+
+
+@pytest.mark.parametrize("name", list(TRANSFORM_TEST_CIRCUITS))
+def test_transform_backend_fingerprint_parity(name):
+    rtl = TRANSFORM_TEST_CIRCUITS[name]()
+    py_fns = transform_fns("python")
+    dev_fns = transform_fns("device")
+    for t in T.TRANSFORM_NAMES:
+        out_py = py_fns[t](rtl)
+        out_dev = dev_fns[t](rtl)
+        assert out_dev.fingerprint() == out_py.fingerprint(), (
+            f"{t} on {name}: device result structure differs from python"
+        )
+
+
+def test_characterize_suite_backend_parity():
+    suite = {"bar-16": C.gen_barrel_shifter(16), "sqrt-8": C.gen_sqrt(8)}
+    recipes = [("Rw",), ("Rf", "Rs"), ("Rs", "Rw", "Ba")]
+    cha_py = characterize_suite(suite, recipes, n_jobs=1, backend="python")
+    cha_dev = characterize_suite(suite, recipes, n_jobs=1, backend="device")
+    assert cha_py == cha_dev
+
+
+# ---------------------------------------------------------------------------
+# cache partial warm start (per-prefix application persistence)
+# ---------------------------------------------------------------------------
+
+
+def test_cache_partial_warm_start(tmp_path, monkeypatch):
+    """A cache populated by one recipe set must warm-start the shared
+    prefix of a *different* recipe set: the second run re-runs only the
+    genuinely new transform applications."""
+    rtl = C.gen_sqrt(8)
+    cache = CharacterizationCache(tmp_path / "cha")
+    characterize_suite(
+        {"sqrt": rtl}, [("Rw", "Ba")], cache=cache, n_jobs=1,
+        backend="python",
+    )
+
+    calls = {t: 0 for t in T.TRANSFORM_NAMES}
+    real_fns = dict(T._TRANSFORM_FNS)
+    for t in T.TRANSFORM_NAMES:
+
+        def counted(aig, _t=t):
+            calls[_t] += 1
+            return real_fns[_t](aig)
+
+        monkeypatch.setitem(T._TRANSFORM_FNS, t, counted)
+
+    # Fresh cache object, same directory: ("Rw", "Rf") shares the ("Rw",)
+    # prefix with the persisted run, so only Rf may actually execute.
+    cha = characterize_suite(
+        {"sqrt": rtl},
+        [("Rw", "Rf")],
+        cache=CharacterizationCache(tmp_path / "cha"),
+        n_jobs=1,
+        backend="python",
+    )
+    assert calls["Rw"] == 0, "persisted Rw application was re-run"
+    assert calls["Rf"] == 1
+    # And the warm-started result is byte-identical to a cold one.
+    cold = characterize_suite(
+        {"sqrt": rtl}, [("Rw", "Rf")], n_jobs=1, backend="python"
+    )
+    assert cha == cold

@@ -127,8 +127,14 @@ def test_cache_miss_then_hit(tmp_path, tiny_pair):
     few = enumerate_recipes()[:4]
     first = characterize_suite(tiny_pair, few, cache=cache, n_jobs=1)
     assert cache.misses == len(tiny_pair) and cache.hits == 0
-    files = list((tmp_path / f"v{T.TRANSFORM_VERSION}").glob("*.json"))
-    assert len(files) == len(tiny_pair)
+    vdir = tmp_path / f"v{T.TRANSFORM_VERSION}"
+    stats_files = [
+        p for p in vdir.glob("*.json") if not p.name.endswith(".apps.json")
+    ]
+    assert len(stats_files) == len(tiny_pair)
+    # per-prefix application persistence rides alongside the stats files
+    apps_files = list(vdir.glob("*.apps.json"))
+    assert len(apps_files) == len(tiny_pair)
 
     second = characterize_suite(tiny_pair, few, cache=cache, n_jobs=1)
     assert cache.hits == len(tiny_pair)
@@ -263,6 +269,33 @@ def test_explore_suite_matches_explore(tiny_pair, tiny_cha):
             assert abs(res.best.metrics.energy_nj - one.best.metrics.energy_nj) < 1e-9
         assert res_jax[name].grid is not None
         assert res_jax[name].n_evaluations == 65 * 12
+
+
+def test_cell_matches_materialized_grids(tiny_pair, tiny_cha):
+    """`cell()` — the lazy per-design gather — must equal the
+    materialized grid entry field for field, on both the per-circuit and
+    suite grids."""
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    suite = SuiteTable.from_cha(tiny_cha)
+    sg = evaluate_suite(suite, topos, EM)
+    t, r = 3, 5
+    for ci, name in enumerate(sg.circuits):
+        cell = sg.cell(name, t, r)
+        assert cell.circuit == name and cell.variant is None
+        assert cell.recipe == sg.recipes[r]
+        assert cell.topology == sg.topologies[t]
+        assert cell.cycles == int(sg.cycles[ci, t, r])
+        assert cell.fits == bool(sg.fits[ci, t, r])
+        assert cell.feasible == bool(sg.feasible[ci, t])
+        assert cell.energy_nj == float(sg.energy_nj[ci, t, r])
+        assert cell.latency_ns == float(sg.latency_ns[ci, t, r])
+        assert cell.area_mm2 == float(sg.area_mm2[t])
+        # the sliced per-circuit grid agrees with the suite-level gather
+        eg = sg.grid(name)
+        ecell = eg.cell(t, r)
+        assert ecell.energy_nj == cell.energy_nj
+        assert ecell.cycles == cell.cycles
+        assert sg.cell(ci, t, r) == cell  # index addressing too
 
 
 # ---------------------------------------------------------------------------

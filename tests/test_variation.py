@@ -602,6 +602,31 @@ def test_suite_best_indices_match_select_best_loop(bar_suite):
                     assert int(got[c, v]) == ref, (kind, max_lat, name, v)
 
 
+def test_variation_cell_matches_materialized_grids(bar_suite):
+    """`cell()` on the variation grids — lazy per-design gathers equal
+    the materialized tensors field for field, variant axis included."""
+    suite, cha = bar_suite
+    suite_table = SuiteTable.from_cha(cha)
+    topos = TopologyTable.from_topologies(TOPOLOGY_LIBRARY)
+    table = ModelTable.monte_carlo(n=5, sigma=0.2, seed=17)
+    svg = evaluate_suite(suite_table, topos, table)
+    v, t, r = 3, 7, 11
+    cell = svg.cell("bar", v, t, r)
+    assert cell.circuit == "bar" and cell.variant == v
+    assert cell.cycles == int(svg.cycles[0, t, r])
+    assert cell.fits == bool(svg.fits[0, t, r])
+    assert cell.feasible == bool(svg.feasible[0, t])
+    assert cell.energy_nj == float(svg.energy_nj[0, v, t, r])
+    assert cell.power_mw == float(svg.power_mw[0, v, t, r])
+    assert cell.tops_per_watt == float(svg.tops_per_watt[0, v, t, r])
+    assert cell.area_mm2 == float(svg.area_mm2[v, t])
+    vg = svg.variation("bar")
+    vcell = vg.cell(v, t, r)
+    assert vcell.energy_nj == cell.energy_nj
+    assert vcell.area_mm2 == cell.area_mm2
+    assert vcell.circuit is None and vcell.variant == v
+
+
 def test_correlated_explore_suite_end_to_end(bar_suite):
     """Acceptance: a (V, T) correlated sweep through
     `explore_suite(model_sweep=...)` -> yield summary, in ONE compile

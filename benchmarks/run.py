@@ -17,11 +17,11 @@ def main() -> None:
     ap.add_argument("--scale", choices=["tiny", "default", "paper"], default="tiny")
     ap.add_argument("--only", default=None,
                     help="comma list: fig9,table1,table2,variation,kernel,"
-                         "roofline,explorer,characterization")
+                         "roofline,explorer,characterization,service")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
         "fig9", "table1", "table2", "variation", "kernel", "roofline",
-        "explorer", "characterization",
+        "explorer", "characterization", "service",
     }
 
     from .common import Csv
@@ -68,6 +68,15 @@ def main() -> None:
         bench_characterization.run(
             csv, scale=args.scale, out_json="BENCH_explorer.json",
             serial_reference=False,
+        )
+    if "service" in which:
+        from . import bench_service
+
+        # warm persistent query engine: cold/warm latency, rps, trace
+        # accounting — merged under "service" in BENCH_explorer.json
+        bench_service.run_service_bench(
+            csv, scale=args.scale, cache_dir=cache,
+            out_json="BENCH_explorer.json",
         )
     if "roofline" in which:
         from . import bench_roofline

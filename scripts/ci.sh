@@ -132,5 +132,29 @@ print(f"model sweep: {v['n_variants']} variants x "
       f"({v['payload_shrink']}x), {v['host_us']:.0f}us -> "
       f"{v['fused_us']:.0f}us, compiles={v['fused_compiles']}")
 EOF
+    echo "== exploration service bench (smoke, warm persistent engine) =="
+    python -m benchmarks.bench_service --smoke \
+        --out runs/BENCH_explorer_smoke.json
+    python - <<'EOF'
+import json
+with open("runs/BENCH_explorer_smoke.json") as f:
+    s = json.load(f)["service"]
+assert s["winners_agree"] == s["n_requests_total"], \
+    f"only {s['winners_agree']}/{s['n_requests_total']} service winners " \
+    f"match a fresh offline explore_request"
+assert s["warm_p50_ms"] < s["cold_p50_ms"] / 10, \
+    f"warm p50 ({s['warm_p50_ms']}ms) must be << cold p50 " \
+    f"({s['cold_p50_ms']}ms)"
+assert s["rerank_retrace"] == 0, \
+    f"constraint-only re-ranks recompiled {s['rerank_retrace']} kernels"
+assert s["fused_traces"] == s["distinct_buckets"], \
+    f"{s['fused_traces']} fused jit traces for {s['distinct_buckets']} " \
+    f"bucket shapes (must be exactly one per shape)"
+print(f"service: cold p50 {s['cold_p50_ms']}ms -> warm p50 "
+      f"{s['warm_p50_ms']}ms (p99 {s['warm_p99_ms']}ms), "
+      f"{s['burst_rps']} rps, {s['fused_traces']} trace(s) for "
+      f"{s['distinct_buckets']} bucket(s), "
+      f"{s['winners_agree']}/{s['n_requests_total']} winners agree")
+EOF
 fi
 echo "CI OK"

@@ -639,6 +639,72 @@ def explore_suite(
     return out
 
 
+def explore_request(
+    rtl: Aig,
+    sram_list: Sequence[SramTopology] = TOPOLOGY_LIBRARY,
+    recipes: Sequence[tuple[str, ...]] | None = None,
+    *,
+    model: EnergyModel | None = None,
+    model_sweep: ModelTable | None = None,
+    max_memory_kb: float | None = None,
+    max_latency_ns: float | None = None,
+    mode: str = "physical",
+    discipline: str = "list",
+    cha: Mapping[tuple[str, ...], AigStats] | None = None,
+    cache: "CharacterizationCache | str | os.PathLike | None" = None,
+    n_jobs: int | None = 1,
+    fused: bool = True,
+    shard: "bool | None" = None,
+    cha_backend: str = "auto",
+) -> ExplorationResult:
+    """Algorithm I for ONE production-style query: (circuit, memory
+    budget, latency bound, variation spec) -> winner.
+
+    This is the request-sized entry point the exploration service
+    (`repro.serve.explore_service.ExplorationService`) answers at scale;
+    calling it directly is the offline reference the service's
+    padded/bucketed fast path is pinned bit-identical to (tier-1
+    ``tests/test_service.py``).
+
+    ``max_memory_kb`` is a *hard* memory budget: the candidate topology
+    list is restricted to designs whose total capacity fits it before
+    Algorithm I runs (capacity feasibility, tie-breaking, and the
+    fallback tiers then all operate inside the budget).  An empty
+    in-budget pool raises ``ValueError`` — the service surfaces that as
+    a structured ``infeasible-memory`` error.  Everything else is
+    `explore_suite` on the single-circuit suite.
+    """
+    pool = list(sram_list)
+    if not pool:
+        raise ValueError("empty sram_list")
+    if max_memory_kb is not None:
+        pool = [t for t in pool if t.total_kb <= max_memory_kb]
+        if not pool:
+            smallest = min(t.total_kb for t in sram_list)
+            raise ValueError(
+                f"no candidate topology fits the {max_memory_kb} KB memory "
+                f"budget (smallest candidate is {smallest} KB)"
+            )
+    out = explore_suite(
+        {rtl.name: rtl},
+        pool,
+        recipes,
+        model=model,
+        mode=mode,
+        max_latency_ns=max_latency_ns,
+        backend="jax",
+        discipline=discipline,
+        cha=None if cha is None else {rtl.name: cha},
+        cache=cache,
+        n_jobs=n_jobs,
+        model_sweep=model_sweep,
+        fused=fused,
+        shard=shard,
+        cha_backend=cha_backend,
+    )
+    return out[rtl.name]
+
+
 def best_worst(result: ExplorationResult) -> tuple[Evaluation, Evaluation]:
     """Table I companion: best- and worst-case feasible implementations."""
     if result.grid is not None:

@@ -1,10 +1,12 @@
-"""Property tests: the four ABC-style transforms preserve semantics."""
+"""Transform tests: the four ABC-style transforms preserve semantics.
+
+Deterministic equivalence / regression tests always run; the
+hypothesis-driven property tests are gated on the optional dependency
+(``pip install -e .[test]``) instead of skipping the whole module.
+"""
 
 import numpy as np
 import pytest
-
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st
 
 from repro.core import circuits as C
 from repro.core.aig import random_aig
@@ -23,6 +25,14 @@ from repro.core.transforms import (
     synth_plan,
     build_plan,
 )
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs the test extra
+    HAVE_HYPOTHESIS = False
 
 TRANSFORMS = [balance, rewrite, refactor, resub]
 rng = np.random.default_rng(42)
@@ -44,20 +54,6 @@ def exhaustive_equivalent(a, b) -> bool:
     pv = _elementary_tables(k)
     words = pv.shape[1]
     return np.array_equal(a.simulate(pv), b.simulate(pv))
-
-
-@settings(max_examples=20, deadline=None)
-@given(
-    n_pis=st.integers(4, 9),
-    n_ands=st.integers(10, 150),
-    n_pos=st.integers(1, 6),
-    seed=st.integers(0, 10**6),
-    which=st.integers(0, 3),
-)
-def test_transform_preserves_function_exact(n_pis, n_ands, n_pos, seed, which):
-    a = random_aig(n_pis, n_ands, n_pos, seed=seed)
-    b = TRANSFORMS[which](a)
-    assert exhaustive_equivalent(a, b), TRANSFORMS[which].__name__
 
 
 @pytest.mark.parametrize("fn", TRANSFORMS)
@@ -102,41 +98,60 @@ def test_rewrite_reduces_redundant():
     assert b.n_ands <= a.n_ands
 
 
-# --------------------------- truth-table machinery -------------------------
+# ------------------------- property tests (hypothesis) ---------------------
 
 
-@settings(max_examples=80, deadline=None)
-@given(k=st.integers(1, 7), tt=st.integers(0, 2**63 - 1), i=st.integers(0, 6))
-def test_cofactors_brute(k, tt, i):
-    if i >= k:
-        i = i % k
-    tt &= _tt_mask(k)
-    neg, pos = _cofactors(tt, i, k)
-    bneg = bpos = 0
-    for p in range(1 << k):
-        bpos |= ((tt >> (p | (1 << i))) & 1) << p
-        bneg |= ((tt >> (p & ~(1 << i))) & 1) << p
-    assert (neg, pos) == (bneg, bpos)
+if HAVE_HYPOTHESIS:
 
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_pis=st.integers(4, 9),
+        n_ands=st.integers(10, 150),
+        n_pos=st.integers(1, 6),
+        seed=st.integers(0, 10**6),
+        which=st.integers(0, 3),
+    )
+    def test_transform_preserves_function_exact(n_pis, n_ands, n_pos, seed, which):
+        a = random_aig(n_pis, n_ands, n_pos, seed=seed)
+        b = TRANSFORMS[which](a)
+        assert exhaustive_equivalent(a, b), TRANSFORMS[which].__name__
 
-@settings(max_examples=80, deadline=None)
-@given(k=st.integers(1, 7), tt=st.integers(0, 2**63 - 1))
-def test_isop_covers_exactly(k, tt):
-    tt &= _tt_mask(k)
-    cubes = _isop(tt, _tt_mask(k), k)
-    assert _cover_tt(cubes, k) == tt
+    @settings(max_examples=80, deadline=None)
+    @given(k=st.integers(1, 7), tt=st.integers(0, 2**63 - 1), i=st.integers(0, 6))
+    def test_cofactors_brute(k, tt, i):
+        if i >= k:
+            i = i % k
+        tt &= _tt_mask(k)
+        neg, pos = _cofactors(tt, i, k)
+        bneg = bpos = 0
+        for p in range(1 << k):
+            bpos |= ((tt >> (p | (1 << i))) & 1) << p
+            bneg |= ((tt >> (p & ~(1 << i))) & 1) << p
+        assert (neg, pos) == (bneg, bpos)
 
+    @settings(max_examples=80, deadline=None)
+    @given(k=st.integers(1, 7), tt=st.integers(0, 2**63 - 1))
+    def test_isop_covers_exactly(k, tt):
+        tt &= _tt_mask(k)
+        cubes = _isop(tt, _tt_mask(k), k)
+        assert _cover_tt(cubes, k) == tt
 
-@settings(max_examples=60, deadline=None)
-@given(k=st.integers(1, 4), tt=st.integers(0, 2**16 - 1))
-def test_synth_plan_correct(k, tt):
-    from repro.core.aig import Aig, lit
+    @settings(max_examples=60, deadline=None)
+    @given(k=st.integers(1, 4), tt=st.integers(0, 2**16 - 1))
+    def test_synth_plan_correct(k, tt):
+        from repro.core.aig import Aig, lit
 
-    tt &= _tt_mask(k)
-    cost, plan = synth_plan(tt, k)
-    aig = Aig(k)
-    out = build_plan(aig, plan, [lit(i + 1) for i in range(k)])
-    aig.add_po(out)
-    got = aig.truth_table(out, list(range(1, k + 1)))
-    assert got == tt
-    assert cost >= 0
+        tt &= _tt_mask(k)
+        cost, plan = synth_plan(tt, k)
+        aig = Aig(k)
+        out = build_plan(aig, plan, [lit(i + 1) for i in range(k)])
+        aig.add_po(out)
+        got = aig.truth_table(out, list(range(1, k + 1)))
+        assert got == tt
+        assert cost >= 0
+
+else:  # pragma: no cover - CI installs the test extra
+
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -e .[test])")
+    def test_property_transforms():
+        pass

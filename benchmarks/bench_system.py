@@ -1,0 +1,112 @@
+"""System-level bench: workload-lowered rCiM vs conventional roofline.
+
+For each benched config the record holds per-token energy/latency on
+both sides (rCiM via the fused suite kernels over the topology library;
+baseline via the traced roofline sweep + pJ/op coefficients), the
+lowering conservation flag, and the winner topology per primitive tile.
+Conservation is additionally checked for EVERY config in the zoo (the
+lowering is pure integer arithmetic, so this is cheap), and the traced
+bandwidth sweep's compile discipline is recorded (one trace per sweep
+shape, zero retraces on value-only changes).
+
+Merged into BENCH_explorer.json under ``"system"``.
+
+    PYTHONPATH=src python -m benchmarks.bench_system --smoke \
+        --out runs/BENCH_explorer_smoke.json
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Csv, merge_json, timeit
+
+# Diverse families: ssm, dense, dense-27b, moe, rglru-hybrid.
+BENCH_ARCHES = ("mamba2-780m", "qwen1.5-4b", "gemma3-27b",
+                "deepseek-moe-16b", "recurrentgemma-9b")
+
+
+def run(csv: Csv, scale: str = "tiny", shape: str = "decode_32k",
+        out_json: str = "BENCH_explorer.json", smoke: bool = False) -> dict:
+    from repro.configs import ARCH_IDS, get_config
+    from repro.core import workloads as W
+    from repro.core.batch import TRACE_COUNTS
+    from repro.launch import system as S
+    from repro.models.config import SHAPES
+
+    # -- conservation across the whole zoo (pure-int, fast) ----------------
+    conserved = {}
+    for arch in ARCH_IDS:
+        lowered = W.lower_config(get_config(arch), SHAPES[shape])
+        conserved[arch] = bool(W.conservation_report(lowered)["ok"])
+
+    # -- per-config comparison ---------------------------------------------
+    configs = {}
+    for arch in BENCH_ARCHES:
+        us = timeit(S.compare_system, arch, shape,
+                    n_warmup=0, n_iter=1 if smoke else 2)
+        rec = S.compare_system(arch, shape)
+        configs[arch] = rec
+        csv.add(
+            f"system/{arch}/{shape}", us,
+            f"rcim={rec['rcim']['energy_per_token_j']:.3e}J,"
+            f"{rec['rcim']['latency_per_token_s']:.3e}s;"
+            f"accel={rec['baseline']['energy_per_token_j']:.3e}J,"
+            f"{rec['baseline']['latency_per_token_s']:.3e}s;"
+            f"Eratio={rec['energy_ratio_rcim_over_accel']:.1f};"
+            f"conserved={rec['conserved']}",
+        )
+
+    # -- traced BW sweep discipline ----------------------------------------
+    cost = S.token_cost(get_config(BENCH_ARCHES[0]), SHAPES[shape])
+    n_points = 5 if smoke else 17
+    bw1 = np.linspace(2e11, 2e12, n_points)
+    bw2 = np.linspace(3e11, 3e12, n_points)
+    c0 = TRACE_COUNTS["roofline_sweep"]
+    out1 = S.sweep_roofline(cost, hbm_bw=bw1)
+    c1 = TRACE_COUNTS["roofline_sweep"]
+    out2 = S.sweep_roofline(cost, hbm_bw=bw2)
+    c2 = TRACE_COUNTS["roofline_sweep"]
+    sweep_rec = dict(
+        n_points=int(n_points),
+        compiles=int(c1 - c0),
+        recompiles_on_value_change=int(c2 - c1),
+        memory_s_monotone=bool(np.all(np.diff(out1["memory_s"]) < 0)),
+        memory_s=out1["memory_s"].tolist(),
+        hbm_bw=out1["hbm_bw"].tolist(),
+    )
+    csv.add(
+        "system/bw_sweep", 0.0,
+        f"n={n_points};compiles={sweep_rec['compiles']};"
+        f"retraces={sweep_rec['recompiles_on_value_change']};"
+        f"monotone={sweep_rec['memory_s_monotone']}",
+    )
+    del out2
+
+    record = dict(
+        shape=shape,
+        configs=configs,
+        conservation=conserved,
+        conservation_checked=len(conserved),
+        bw_sweep=sweep_rec,
+    )
+    merge_json(out_json, {"system": record})
+    return record
+
+
+def main() -> None:  # pragma: no cover - CLI convenience
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--out", default="BENCH_explorer.json")
+    args = ap.parse_args()
+    csv = Csv()
+    print("name,us_per_call,derived")
+    run(csv, shape=args.shape, out_json=args.out, smoke=args.smoke)
+    csv.save("bench_system.csv")
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

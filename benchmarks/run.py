@@ -17,11 +17,11 @@ def main() -> None:
     ap.add_argument("--scale", choices=["tiny", "default", "paper"], default="tiny")
     ap.add_argument("--only", default=None,
                     help="comma list: fig9,table1,table2,variation,kernel,"
-                         "roofline,explorer,characterization,service")
+                         "roofline,explorer,characterization,service,system")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
         "fig9", "table1", "table2", "variation", "kernel", "roofline",
-        "explorer", "characterization", "service",
+        "explorer", "characterization", "service", "system",
     }
 
     from .common import Csv
@@ -82,6 +82,12 @@ def main() -> None:
         from . import bench_roofline
 
         bench_roofline.run(csv)
+    if "system" in which:
+        from . import bench_system
+
+        # workload-lowered rCiM vs conventional roofline per token —
+        # merged under "system" in BENCH_explorer.json
+        bench_system.run(csv, scale=args.scale, out_json="BENCH_explorer.json")
     if "explorer" in which:
         from . import bench_explorer
 

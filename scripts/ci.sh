@@ -2,8 +2,10 @@
 # CI entry point: tier-1 tests + docs link check + suite-level smoke bench
 # + model-variation smoke bench.
 #
-#   scripts/ci.sh            # tests + docs check + smoke benches
+#   scripts/ci.sh            # full tests + docs check + smoke benches
 #   scripts/ci.sh --no-bench # tests + docs check only
+#   scripts/ci.sh --smoke    # fast profile: -m "not slow" marker split,
+#                            # tighter per-test timeout, capped hypothesis
 #
 # Uses the PYTHONPATH=src layout (works without installation; `pip
 # install -e .` works too, see pyproject.toml).
@@ -12,6 +14,29 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 mkdir -p runs
+
+RUN_BENCH=1
+SMOKE=0
+for arg in "$@"; do
+    case "$arg" in
+        --no-bench) RUN_BENCH=0 ;;
+        --smoke)    SMOKE=1 ;;
+        *) echo "unknown flag: $arg (known: --no-bench --smoke)"; exit 2 ;;
+    esac
+done
+
+# Per-test SIGALRM timeout (tests/conftest.py) so a hung test fails fast
+# instead of stalling the pipeline, and a capped hypothesis "ci" profile
+# so the property suites stay inside the CI time budget.
+export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-ci}"
+if [[ "$SMOKE" == 1 ]]; then
+    export PYTEST_PER_TEST_TIMEOUT="${PYTEST_PER_TEST_TIMEOUT:-120}"
+    export HYPOTHESIS_MAX_EXAMPLES="${HYPOTHESIS_MAX_EXAMPLES:-10}"
+    PYTEST_MARKERS=(-m "not slow")
+else
+    export PYTEST_PER_TEST_TIMEOUT="${PYTEST_PER_TEST_TIMEOUT:-600}"
+    PYTEST_MARKERS=()
+fi
 
 # The property suites (tests/test_transforms.py, test_variation.py, ...)
 # need hypothesis (the pyproject `test` extra); install it when the
@@ -24,15 +49,15 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
         || echo "warning: could not install hypothesis (offline?); property suites will be SKIPPED"
 fi
 
-echo "== tier-1 tests =="
-python -m pytest -x -q -rs 2>&1 | tee runs/pytest.log
+echo "== tier-1 tests (smoke=$SMOKE, per-test timeout ${PYTEST_PER_TEST_TIMEOUT}s) =="
+python -m pytest -x -q -rs "${PYTEST_MARKERS[@]}" 2>&1 | tee runs/pytest.log
 n_skipped=$(grep -Eo '[0-9]+ skipped' runs/pytest.log | tail -1 | grep -Eo '[0-9]+' || echo 0)
 echo "skipped tests: ${n_skipped} (see runs/pytest.log for reasons)"
 
 echo "== docs link check =="
 python scripts/check_links.py
 
-if [[ "${1:-}" != "--no-bench" ]]; then
+if [[ "$RUN_BENCH" == 1 ]]; then
     echo "== suite-level explorer bench (smoke, cache cold + warm) =="
     python -m benchmarks.bench_explorer --smoke --out runs/BENCH_explorer_smoke.json
     python - <<'EOF'
@@ -132,6 +157,37 @@ print(f"model sweep: {v['n_variants']} variants x "
       f"({v['payload_shrink']}x), {v['host_us']:.0f}us -> "
       f"{v['fused_us']:.0f}us, compiles={v['fused_compiles']}")
 EOF
+    echo "== system bench (smoke, rCiM vs conventional roofline per token) =="
+    python -m benchmarks.bench_system --smoke \
+        --out runs/BENCH_explorer_smoke.json
+    python - <<'EOF'
+import json, math
+with open("runs/BENCH_explorer_smoke.json") as f:
+    s = json.load(f)["system"]
+assert len(s["configs"]) >= 4, \
+    f"system bench must cover >= 4 configs, got {len(s['configs'])}"
+for arch, ok in s["conservation"].items():
+    assert ok, f"{arch}: lowered op stream not conserved (sum over " \
+               f"levels != per-layer op totals)"
+for arch, rec in s["configs"].items():
+    assert rec["conserved"], f"{arch}: conservation flag false"
+    for side in ("rcim", "baseline"):
+        e = rec[side]["energy_per_token_j"]
+        t = rec[side]["latency_per_token_s"]
+        assert math.isfinite(e) and e > 0, f"{arch}/{side}: bad energy {e}"
+        assert math.isfinite(t) and t > 0, f"{arch}/{side}: bad latency {t}"
+sw = s["bw_sweep"]
+assert sw["compiles"] == 1, \
+    f"an N-point BW sweep must cost exactly one jit trace, got {sw['compiles']}"
+assert sw["recompiles_on_value_change"] == 0, \
+    "changing only bandwidth values retriggered tracing"
+assert sw["memory_s_monotone"], "memory term not monotone in HBM BW"
+print(f"system: {len(s['configs'])} configs compared "
+      f"(conservation checked on {s['conservation_checked']}), "
+      f"bw sweep {sw['n_points']} points, compiles={sw['compiles']}, "
+      f"retraces={sw['recompiles_on_value_change']}")
+EOF
+
     echo "== exploration service bench (smoke, warm persistent engine) =="
     python -m benchmarks.bench_service --smoke \
         --out runs/BENCH_explorer_smoke.json

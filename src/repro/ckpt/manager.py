@@ -65,20 +65,41 @@ class CheckpointManager:
         self.async_save = async_save
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
 
     # -- save ----------------------------------------------------------------
 
     def save(self, step: int, tree, meta: dict | None = None) -> None:
+        """Snapshot ``tree`` to host memory and publish it as ``step``.
+
+        With ``async_save`` the call returns immediately: each writer
+        thread queues behind the previous in-flight writer (joining it
+        before touching disk), so saves publish in call order, ``_gc``
+        never races a half-published step, and ``wait()`` drains the
+        whole chain by joining only the newest writer.  The handoff is
+        lock-protected, so concurrent ``save()`` callers cannot lose a
+        writer thread.
+        """
         flat, _ = _flatten(tree)
         host_arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
         if self.async_save:
-            self.wait()
-            self._thread = threading.Thread(
-                target=self._write, args=(step, host_arrays, meta or {}), daemon=True
-            )
-            self._thread.start()
+            with self._lock:
+                prev = self._thread
+                t = threading.Thread(
+                    target=self._write_after,
+                    args=(prev, step, host_arrays, meta or {}),
+                    daemon=True,
+                )
+                self._thread = t
+                t.start()
         else:
             self._write(step, host_arrays, meta or {})
+
+    def _write_after(self, prev: threading.Thread | None, step: int,
+                     arrays: dict, meta: dict) -> None:
+        if prev is not None:
+            prev.join()  # queue behind the in-flight writer
+        self._write(step, arrays, meta)
 
     def _write(self, step: int, arrays: dict, meta: dict) -> None:
         tmp = os.path.join(self.dir, f"step_{step}.tmp")
@@ -101,8 +122,12 @@ class CheckpointManager:
         self._gc()
 
     def wait(self) -> None:
-        if self._thread is not None and self._thread.is_alive():
-            self._thread.join()
+        """Join the newest writer; since every writer joins its
+        predecessor first, this transitively drains every pending save."""
+        with self._lock:
+            t = self._thread
+        if t is not None and t.is_alive():
+            t.join()
 
     def _gc(self) -> None:
         steps = sorted(self.steps())

@@ -534,12 +534,13 @@ def _ceil_div(a, b):
     return -(-a // b)
 
 
-def _schedule_core(ops, n_levels, width, mpt, is_single, total_bits, discipline):
+def _schedule_core(ops, n_levels, width, mpt, is_single, total_bits, rows,
+                   discipline):
     """Shared schedule math; mirrors mapping.schedule_stats exactly.
 
     Shapes: ops (R, L, 3); width (T,); mpt (T, 3); is_single (T,);
-    total_bits (T,).  Returns (cycles, active_macro_cycles, fits), each
-    (R, T) with integer dtype (bool for fits).
+    total_bits (T,); rows (T,).  Returns (cycles, active_macro_cycles,
+    fits), each (R, T) with integer dtype (bool for fits).
     """
     wt = width[None, :, None] * mpt[None, :, :]          # (1, T, 3)
     tot = ops.sum(axis=1)                                # (R, 3)
@@ -555,6 +556,11 @@ def _schedule_core(ops, n_levels, width, mpt, is_single, total_bits, discipline)
             is_single[None, :], sum_b, (b * mpt[None, :, :]).sum(axis=-1)
         )
         cycles = jnp.maximum(n_levels[:, None], width_bound) + 1
+        # Steady-state working set: ~width_bound/depth concurrent batches,
+        # each needing 2 operand rows + 1 result row.
+        rows_needed = 3 * _ceil_div(
+            jnp.maximum(width_bound, 1), jnp.maximum(n_levels[:, None], 1)
+        ) + 2
     elif discipline == "levels":
         # Lock-step: every real level pays max(1, per-type batch bound);
         # the single-macro case serializes the three op types.
@@ -574,25 +580,31 @@ def _schedule_core(ops, n_levels, width, mpt, is_single, total_bits, discipline)
             b.sum(axis=(-1, -2)),
             (b * mpt[None, :, None, :]).sum(axis=(-1, -2)),
         )
+        # The busiest level's batch schedule is the peak working set.
+        rows_needed = 3 * per_level.max(axis=-1) + 2     # (R, T)
     else:
         raise ValueError(f"unknown discipline {discipline!r}")
 
-    fits = BITS_PER_GATE * gates[:, None] <= total_bits[None, :]
+    # Feasibility = bit capacity (Alg. I line 9) AND row budget — the
+    # same two-term check as mapping.schedule_stats / _schedule_list.
+    fits = (BITS_PER_GATE * gates[:, None] <= total_bits[None, :]) & (
+        rows_needed <= rows[None, :]
+    )
     return cycles, active, fits
 
 
 def _make_schedule_grid():
-    def fn(ops, n_levels, width, mpt, is_single, total_bits, discipline):
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, rows, discipline):
         TRACE_COUNTS["schedule_grid"] += 1
         return _schedule_core(
-            ops, n_levels, width, mpt, is_single, total_bits, discipline
+            ops, n_levels, width, mpt, is_single, total_bits, rows, discipline
         )
 
     return jax.jit(fn, static_argnames=("discipline",))
 
 
-def _evaluate_core(ops, n_levels, width, mpt, is_single, total_bits, cols,
-                   params, discipline, mode):
+def _evaluate_core(ops, n_levels, width, mpt, is_single, total_bits, rows,
+                   cols, params, discipline, mode):
     """Schedule once, then evaluate every model variant over it.
 
     ``params`` is a `ModelParams` pytree of *traced* float64 arrays with a
@@ -604,7 +616,7 @@ def _evaluate_core(ops, n_levels, width, mpt, is_single, total_bits, cols,
     arrays and each metric as a (V, R, T) array.
     """
     cycles, active, fits = _schedule_core(
-        ops, n_levels, width, mpt, is_single, total_bits, discipline
+        ops, n_levels, width, mpt, is_single, total_bits, rows, discipline
     )
     tot = ops.sum(axis=1)                                # (R, 3)
     gates = tot.sum(axis=-1)                             # (R,)
@@ -658,11 +670,11 @@ def _evaluate_core(ops, n_levels, width, mpt, is_single, total_bits, cols,
 
 
 def _make_evaluate_grid():
-    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, rows, cols,
            params, discipline, mode):
         TRACE_COUNTS["evaluate_grid"] += 1
         return _evaluate_core(
-            ops, n_levels, width, mpt, is_single, total_bits, cols,
+            ops, n_levels, width, mpt, is_single, total_bits, rows, cols,
             params, discipline, mode,
         )
 
@@ -670,12 +682,12 @@ def _make_evaluate_grid():
 
 
 def _make_schedule_suite():
-    def fn(ops, n_levels, width, mpt, is_single, total_bits, discipline):
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, rows, discipline):
         TRACE_COUNTS["schedule_suite"] += 1
 
         def per_circuit(o, nl):
             return _schedule_core(
-                o, nl, width, mpt, is_single, total_bits, discipline
+                o, nl, width, mpt, is_single, total_bits, rows, discipline
             )
 
         return jax.vmap(per_circuit)(ops, n_levels)
@@ -684,13 +696,13 @@ def _make_schedule_suite():
 
 
 def _make_evaluate_suite():
-    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, rows, cols,
            params, discipline, mode):
         TRACE_COUNTS["evaluate_suite"] += 1
 
         def per_circuit(o, nl):
             return _evaluate_core(
-                o, nl, width, mpt, is_single, total_bits, cols,
+                o, nl, width, mpt, is_single, total_bits, rows, cols,
                 params, discipline, mode,
             )
 
@@ -999,7 +1011,7 @@ def schedule_batch(
         cycles, active, fits = schedule_grid(
             work.ops, work.n_levels, topos.ops_per_cycle,
             topos.macros_per_type, topos.is_single, topos.total_bits,
-            discipline,
+            topos.rows, discipline,
         )
         return dict(
             cycles=np.asarray(cycles).T,
@@ -1096,7 +1108,7 @@ def evaluate_batch(
         out = evaluate_grid(
             work.ops, work.n_levels, topos.ops_per_cycle,
             topos.macros_per_type, topos.is_single, topos.total_bits,
-            topos.cols, _model_params(table), discipline, mode,
+            topos.rows, topos.cols, _model_params(table), discipline, mode,
         )
         sched, mets = _layout_outputs(out, lazy)
         return _build_grid(
@@ -1209,7 +1221,7 @@ def schedule_suite(
         cycles, active, fits = schedule(
             suite.ops, suite.n_levels, topos.ops_per_cycle,
             topos.macros_per_type, topos.is_single, topos.total_bits,
-            discipline,
+            topos.rows, discipline,
         )
         return dict(
             cycles=np.swapaxes(np.asarray(cycles), 1, 2),
@@ -1425,7 +1437,7 @@ def evaluate_suite(
         out = evaluate(
             suite.ops, suite.n_levels, topos.ops_per_cycle,
             topos.macros_per_type, topos.is_single, topos.total_bits,
-            topos.cols, _model_params(table), discipline, mode,
+            topos.rows, topos.cols, _model_params(table), discipline, mode,
         )
         sched, mets = _layout_outputs(out, lazy)
         return _build_suite_grid(
@@ -1531,11 +1543,11 @@ def _jit_fused(fn):
 
 
 def _make_fused_grid():
-    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, rows, cols,
            params, feasible, max_latency, discipline, mode, use_latency):
         TRACE_COUNTS["fused_grid"] += 1
         out = _evaluate_core(
-            ops, n_levels, width, mpt, is_single, total_bits, cols,
+            ops, n_levels, width, mpt, is_single, total_bits, rows, cols,
             params, discipline, mode,
         )
         return _fused_tail(out, feasible, max_latency, use_latency)
@@ -1544,13 +1556,13 @@ def _make_fused_grid():
 
 
 def _make_fused_suite():
-    def fn(ops, n_levels, width, mpt, is_single, total_bits, cols,
+    def fn(ops, n_levels, width, mpt, is_single, total_bits, rows, cols,
            params, feasible, max_latency, discipline, mode, use_latency):
         TRACE_COUNTS["fused_suite"] += 1
 
         def per_circuit(o, nl):
             return _evaluate_core(
-                o, nl, width, mpt, is_single, total_bits, cols,
+                o, nl, width, mpt, is_single, total_bits, rows, cols,
                 params, discipline, mode,
             )
 
@@ -1697,7 +1709,7 @@ def evaluate_select_batch(
         res = fused_grid(
             work.ops, work.n_levels, topos.ops_per_cycle,
             topos.macros_per_type, topos.is_single, topos.total_bits,
-            topos.cols, params, feasible,
+            topos.rows, topos.cols, params, feasible,
             np.float64(max_latency_ns if use_latency else 0.0),
             discipline, mode, use_latency,
         )
@@ -1742,7 +1754,7 @@ def evaluate_select_suite(
         res = fused_suite(
             suite.ops, suite.n_levels, topos.ops_per_cycle,
             topos.macros_per_type, topos.is_single, topos.total_bits,
-            topos.cols, params, feasible,
+            topos.rows, topos.cols, params, feasible,
             np.float64(max_latency_ns if use_latency else 0.0),
             discipline, mode, use_latency,
         )

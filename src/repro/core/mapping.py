@@ -144,11 +144,16 @@ def schedule_stats(
 
     # Capacity check (Alg. I line 9): 4 bits per gate.
     gates = sum(op_counts.values())
-    fits = BITS_PER_GATE * gates <= topo.total_bits
     # Row schedule: each level batch needs 2 operand rows + 1 result row;
     # rows are recycled every other level (outputs become next operands).
+    # The working set of the busiest level must actually fit in the row
+    # budget — bit capacity alone is not feasibility (a wide, shallow
+    # netlist can satisfy the 4-bits/gate rule while its peak level
+    # needs more rows than the macro has).
     max_batches = max(per_level_cycles) if per_level_cycles else 0
-    rows_used = min(topo.rows, 3 * max_batches + 2)
+    rows_needed = 3 * max_batches + 2
+    fits = BITS_PER_GATE * gates <= topo.total_bits and rows_needed <= topo.rows
+    rows_used = min(topo.rows, rows_needed)
 
     return MappingResult(
         topo=topo,
@@ -192,8 +197,12 @@ def _schedule_list(stats: AigStats, topo: SramTopology) -> MappingResult:
     total = max(depth_bound, width_bound) + 1  # +1 writeback drain
 
     gates = sum(op_counts.values())
-    fits = BITS_PER_GATE * gates <= topo.total_bits
-    rows_used = min(topo.rows, 3 * math.ceil(max(1, width_bound) / max(1, depth_bound)) + 2)
+    # Feasibility = bit capacity (Alg. I line 9) AND row budget: the
+    # steady-state working set holds ~width_bound/depth_bound concurrent
+    # batches, each needing 2 operand rows + 1 result row.
+    rows_needed = 3 * math.ceil(max(1, width_bound) / max(1, depth_bound)) + 2
+    fits = BITS_PER_GATE * gates <= topo.total_bits and rows_needed <= topo.rows
+    rows_used = min(topo.rows, rows_needed)
 
     return MappingResult(
         topo=topo,

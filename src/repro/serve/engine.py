@@ -126,7 +126,18 @@ class ServeEngine:
 
     def serve(self, requests: list[Request], prompt_pad: int) -> list[Request]:
         """Serve a request list on ``self.batch`` slots, refilling slots as
-        requests finish (waves of prefill + shared decode steps)."""
+        requests finish (waves of prefill + shared decode steps).
+
+        Every prompt must satisfy ``1 <= len(prompt) <= prompt_pad``; a
+        violating request raises `ValueError` up front (naming the uid)
+        rather than surfacing as a numpy broadcast error mid-wave.
+        """
+        for r in requests:
+            if not 0 < len(r.prompt) <= prompt_pad:
+                raise ValueError(
+                    f"request uid={r.uid}: prompt length {len(r.prompt)} "
+                    f"must be in [1, prompt_pad={prompt_pad}]"
+                )
         queue = list(requests)
         done: list[Request] = []
         while queue:
@@ -134,7 +145,7 @@ class ServeEngine:
             queue = queue[len(wave) :]
             prompts = np.zeros((self.batch, prompt_pad), np.int32)
             for i, r in enumerate(wave):
-                prompts[i, -len(r.prompt) :] = r.prompt  # left-pad
+                prompts[i, prompt_pad - len(r.prompt) :] = r.prompt  # left-pad
             max_new = max(r.max_new for r in wave)
             toks = self.generate(prompts, max_new)
             for i, r in enumerate(wave):

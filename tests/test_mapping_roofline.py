@@ -38,6 +38,38 @@ def test_capacity_monotone():
     assert fits == sorted(fits)
 
 
+def test_row_budget_gates_feasibility():
+    """Regression: a wide-but-shallow netlist whose working set exceeds the
+    row budget must NOT report fits=True on bit capacity alone.
+
+    2000 NAND2 in one level on an 8-row x 1024-col macro (1 KB): the
+    4-bits/gate rule passes (8000 <= 8192 bits) but the single level
+    needs ceil(2000/512) = 4 batches -> 3*4+2 = 14 rows > 8.
+    """
+    from repro.core.batch import TopologyTable, WorkloadTable, schedule_batch
+    from repro.core.mapping import BITS_PER_GATE
+
+    starved = SramTopology.from_geometry(8, 1024, 1)
+    wide = stats_from_levels([(2000, 0, 0)])
+    deep = stats_from_levels([(64, 0, 0)] * 10)  # control: 5 rows suffice
+    for disc in ("levels", "list"):
+        res = schedule_stats(wide, starved, discipline=disc)
+        assert BITS_PER_GATE * wide.total_gates <= starved.total_bits
+        assert not res.fits, f"{disc}: row-starved schedule must not fit"
+        assert res.rows_used <= starved.rows
+        assert schedule_stats(deep, starved, discipline=disc).fits
+
+    # The batched engine applies the identical two-term feasibility check.
+    work = WorkloadTable.from_stats({("wide",): wide, ("deep",): deep})
+    topos = TopologyTable.from_topologies([starved, SramTopology(8, 1)])
+    for disc in ("levels", "list"):
+        got = schedule_batch(work, topos, discipline=disc)
+        for ti, topo in enumerate(topos.topologies):
+            for ri, st_ in enumerate((wide, deep)):
+                ref = schedule_stats(st_, topo, discipline=disc)
+                assert bool(got["fits"][ti, ri]) == ref.fits
+
+
 # ------------------------------ roofline parse ------------------------------
 
 FAKE_HLO = """
@@ -71,6 +103,54 @@ def test_collective_parse():
     assert stats.by_kind["reduce-scatter"] == pytest.approx(rs)
     assert stats.by_kind["collective-permute"] == pytest.approx(8 * 128 * 4)
     assert stats.n_ops == 5  # -done line not double counted
+
+
+TUPLE_HLO = """
+ENTRY %main {
+  %art = (f32[128,256]{1,0}, bf16[64]{0}) all-reduce(%a, %b), replica_groups=[4,8]<=[32], to_apply=%sum
+  %agd = f32[32,2048]{1,0} all-gather(%p), channel_id=1, dimensions={1}
+  %cp2 = bf16[4,64]{1,0} collective-permute(%p), source_target_pairs={{0,1},{1,2}}
+}
+"""
+
+
+def test_collective_parse_tuple_and_default_group():
+    from repro.launch.roofline import collective_bytes
+
+    stats = collective_bytes(TUPLE_HLO, default_group=16)
+    # variadic all-reduce: every tuple element is payload; n=8 from the
+    # iota form [4,8]<=[32] (groups of size 8)
+    payload = 128 * 256 * 4 + 64 * 2
+    assert stats.by_kind["all-reduce"] == pytest.approx(2 * (7 / 8) * payload)
+    # no replica_groups on the line -> the model-axis default group size
+    ag = 32 * 2048 * 4
+    assert stats.by_kind["all-gather"] == pytest.approx((15 / 16) * ag)
+    # collective-permute is group-size independent: 1 x payload
+    assert stats.by_kind["collective-permute"] == pytest.approx(4 * 64 * 2)
+    assert stats.n_ops == 3
+
+
+def test_collective_ring_factors_exact():
+    """Pin each kind's ring factor on the shared fixture (the all-to-all
+    term had no direct assertion before)."""
+    from repro.launch.roofline import collective_bytes
+
+    stats = collective_bytes(FAKE_HLO, default_group=16)
+    assert stats.by_kind["all-to-all"] == pytest.approx(
+        (15 / 16) * 64 * 512 * 4
+    )
+    # default_group must not leak into ops that carry explicit groups
+    stats2 = collective_bytes(FAKE_HLO, default_group=4)
+    assert stats2.by_kind["all-gather"] == stats.by_kind["all-gather"]
+    assert stats2.by_kind["all-reduce"] == stats.by_kind["all-reduce"]
+
+
+def test_group_size_fallbacks():
+    from repro.launch.roofline import _group_size
+
+    assert _group_size("replica_groups=[32,16]<=[512]", 8) == 16
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}", 8) == 4
+    assert _group_size("channel_id=1, dimensions={1}", 8) == 8
 
 
 def test_roofline_terms_and_bottleneck():

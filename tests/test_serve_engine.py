@@ -1,0 +1,83 @@
+"""ServeEngine slot-batching unit tests (no real model required).
+
+The engine's generate() is stubbed so the tests exercise exactly the
+serve()-side plumbing: prompt validation and left-padding.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.engine import Request, ServeEngine
+
+
+class _StubModel:
+    """Just enough surface for ServeEngine.__init__ (jit wraps lazily)."""
+
+    def prefill(self, params, batch):  # pragma: no cover - never traced here
+        raise NotImplementedError
+
+    def decode_step(self, params, caches, tok, pos):  # pragma: no cover
+        raise NotImplementedError
+
+
+def _engine(batch=2):
+    return ServeEngine(_StubModel(), params=None, batch=batch, max_seq=32)
+
+
+def test_serve_rejects_overlong_prompt():
+    """Regression: an over-long prompt used to die with a numpy broadcast
+    error deep inside the padding loop; it must be a clear ValueError."""
+    eng = _engine()
+    reqs = [Request(uid=7, prompt=np.arange(9, dtype=np.int32) + 1)]
+    with pytest.raises(ValueError, match=r"uid=7.*length 9.*prompt_pad=8"):
+        eng.serve(reqs, prompt_pad=8)
+
+
+def test_serve_rejects_empty_prompt():
+    """A zero-length prompt would silently slice the whole row via
+    ``[-0:]``; it must be rejected up front too."""
+    eng = _engine()
+    reqs = [Request(uid=3, prompt=np.zeros(0, np.int32))]
+    with pytest.raises(ValueError, match=r"uid=3.*length 0"):
+        eng.serve(reqs, prompt_pad=8)
+
+
+def test_serve_left_pads_including_exact_fit():
+    """Prompts shorter than and exactly equal to prompt_pad both land
+    left-aligned-to-the-right; validation happens before any prefill."""
+    eng = _engine(batch=2)
+    captured = []
+
+    def fake_generate(prompts, max_new, extra_batch=None):
+        captured.append(np.array(prompts))
+        return np.zeros((eng.batch, max_new), np.int32)
+
+    eng.generate = fake_generate
+    reqs = [
+        Request(uid=0, prompt=np.array([1, 2, 3], np.int32), max_new=4),
+        Request(uid=1, prompt=np.arange(1, 9, dtype=np.int32), max_new=4),
+    ]
+    done = eng.serve(reqs, prompt_pad=8)
+    assert [r.uid for r in done] == [0, 1] and all(r.done for r in done)
+    (prompts,) = captured
+    np.testing.assert_array_equal(
+        prompts[0], np.array([0, 0, 0, 0, 0, 1, 2, 3], np.int32)
+    )
+    np.testing.assert_array_equal(
+        prompts[1], np.arange(1, 9, dtype=np.int32)
+    )
+
+
+def test_serve_validates_before_any_wave_runs():
+    """A bad request anywhere in the list fails fast — no partial wave of
+    prefills runs first."""
+    eng = _engine(batch=1)
+    calls = []
+    eng.generate = lambda *a, **k: calls.append(a) or np.zeros((1, 1), np.int32)
+    reqs = [
+        Request(uid=0, prompt=np.array([1], np.int32), max_new=1),
+        Request(uid=1, prompt=np.arange(99, dtype=np.int32), max_new=1),
+    ]
+    with pytest.raises(ValueError, match="uid=1"):
+        eng.serve(reqs, prompt_pad=8)
+    assert calls == []

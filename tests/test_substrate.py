@@ -155,6 +155,72 @@ def test_checkpoint_restore_with_sharding(tmp_path):
     assert restored["w"].sharding == shard["w"]
 
 
+def test_checkpoint_rapid_async_saves_queue_behind(tmp_path):
+    """Regression: with async_save, a second save() used to BLOCK on the
+    in-flight writer (and a concurrent caller could drop its thread
+    handle, so wait() no longer drained it).  Now saves return
+    immediately, queue behind each other in call order, and wait()
+    drains the whole chain."""
+    import threading
+    import time
+
+    from repro.ckpt.manager import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), keep_n=10, async_save=True)
+    gate = threading.Event()
+    started = threading.Event()
+    orig_write = mgr._write
+
+    def gated_write(step, arrays, meta):
+        if step == 1:
+            started.set()
+            gate.wait(timeout=10)
+        orig_write(step, arrays, meta)
+
+    mgr._write = gated_write
+
+    mgr.save(1, dict(x=jnp.zeros(3)))
+    assert started.wait(timeout=10)  # first writer is alive, mid-write
+    t0 = time.monotonic()
+    mgr.save(2, dict(x=jnp.ones(3)))
+    elapsed = time.monotonic() - t0
+    assert elapsed < 2.0, (
+        f"save() must not block behind the in-flight writer ({elapsed:.1f}s)"
+    )
+    assert mgr.steps() == []  # step 2 must not publish ahead of step 1
+    gate.set()
+    mgr.wait()  # drains BOTH writers
+    assert mgr.steps() == [1, 2]
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    restored, meta = mgr.restore(dict(x=jnp.zeros(3)))
+    assert meta["step"] == 2
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.ones(3))
+
+
+def test_checkpoint_concurrent_savers_all_land(tmp_path):
+    """Many threads calling save() simultaneously: the lock-protected
+    writer handoff means no step is lost and wait() drains everything."""
+    import threading
+
+    from repro.ckpt.manager import CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), keep_n=64, async_save=True)
+    barrier = threading.Barrier(8)
+
+    def saver(step):
+        barrier.wait(timeout=10)
+        mgr.save(step, dict(x=jnp.full(4, step, jnp.float32)))
+
+    threads = [threading.Thread(target=saver, args=(s,)) for s in range(1, 9)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    mgr.wait()
+    assert mgr.steps() == list(range(1, 9))
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
 def test_checkpoint_shape_mismatch_rejected(tmp_path):
     from repro.ckpt.manager import CheckpointManager
 

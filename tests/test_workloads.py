@@ -1,0 +1,202 @@
+"""Workload lowering + system-comparison tests (core/workloads.py,
+launch/system.py): exact primitive semantics, conservation of lowered op
+counts for every config in the zoo, suite-kernel pricing, and the traced
+roofline-bandwidth sweep (trace discipline + monotonicity)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import workloads as W
+from repro.core.batch import TRACE_COUNTS
+from repro.core.sram import TOPOLOGY_LIBRARY
+from repro.launch import system as S
+from repro.models.config import SHAPES
+
+
+def _pack(vals, nbits):
+    """Pack per-vector integers into bit-parallel uint64 PI rows."""
+    out = np.zeros((nbits, 1), np.uint64)
+    for j, v in enumerate(vals):
+        for i in range(nbits):
+            if (int(v) >> i) & 1:
+                out[i, 0] |= np.uint64(1) << np.uint64(j)
+    return out
+
+
+def _unpack(po, nbits, n_vecs):
+    out = np.zeros(n_vecs, dtype=np.int64)
+    for i in range(nbits):
+        for j in range(n_vecs):
+            if (int(po[i, 0]) >> j) & 1:
+                out[j] |= 1 << i
+    return out
+
+
+# ----------------------------- primitives ----------------------------------
+
+
+def test_mac_tile_exact():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 256, 64)
+    b = rng.integers(0, 256, 64)
+    acc = rng.integers(0, 65536, 64)
+    mac = W.primitive_aigs()["mac8"]
+    po = mac.simulate(np.vstack([_pack(a, 8), _pack(b, 8), _pack(acc, 16)]))
+    got = _unpack(po, 16, 64)
+    np.testing.assert_array_equal(got, (a * b + acc) % 65536)
+
+
+def test_add_and_max_tiles_exact():
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 65536, 64)
+    b = rng.integers(0, 65536, 64)
+    add = W.primitive_aigs()["add16"]
+    po = add.simulate(np.vstack([_pack(a, 16), _pack(b, 16)]))
+    np.testing.assert_array_equal(_unpack(po, 16, 64), (a + b) % 65536)
+
+    a8 = rng.integers(0, 256, 64)
+    b8 = rng.integers(0, 256, 64)
+    mx = W.primitive_aigs()["max8"]
+    po = mx.simulate(np.vstack([_pack(a8, 8), _pack(b8, 8)]))
+    np.testing.assert_array_equal(_unpack(po, 8, 64), np.maximum(a8, b8))
+
+
+def test_primitive_streams_internally_consistent():
+    for name, s in W.primitive_stats().items():
+        mat = s.ops_matrix()
+        assert mat.shape == (s.n_levels, 3)
+        assert (mat.sum(axis=0) ==
+                [s.nand_count, s.nor_count, s.inv_count]).all(), name
+        assert s.total_gates > 0 and s.n_levels > 0
+
+
+# ------------------------------ lowering -----------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_lowering_conserves_ops_every_config(arch):
+    """The CI acceptance invariant: summing the per-level streams equals
+    the per-layer op totals for every config in the zoo."""
+    cfg = get_config(arch)
+    for shape_name in ("decode_32k", "train_4k"):
+        lowered = W.lower_config(cfg, SHAPES[shape_name])
+        rep = W.conservation_report(lowered)
+        assert rep["ok"], (arch, shape_name, rep)
+        assert lowered.macs_per_token() > 0
+        tiles = lowered.tiles_per_token()
+        assert all(v >= 0 for v in tiles.values())
+        # matmul work dominates the elementwise terms
+        assert tiles["mac8"] > tiles["add16"] + tiles["max8"]
+
+
+def test_moe_lowering_counts_active_experts_only():
+    import dataclasses
+
+    cfg = get_config("deepseek-moe-16b")
+    macs = W.lower_config(cfg, SHAPES["decode_32k"]).macs_per_token()
+    # routing all experts instead of top_k must cost strictly more MACs,
+    # and the per-layer FFN term must equal the active-expert count
+    dense = dataclasses.replace(cfg, top_k=cfg.n_experts)
+    macs_all = W.lower_config(dense, SHAPES["decode_32k"]).macs_per_token()
+    assert macs < macs_all
+    d = cfg.d_model
+    expect_ffn = ((cfg.top_k + cfg.n_shared_experts) * 3 * d * cfg.moe_d_ff
+                  + d * cfg.n_experts)
+    layer = {l.kind: l for l in
+             W.lower_config(cfg, SHAPES["decode_32k"]).layers}["attn"]
+    ctx = SHAPES["decode_32k"].seq_len
+    hd = cfg.resolved_head_dim
+    attn_macs = (d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads)
+                 + cfg.n_heads * hd * d + 2 * ctx * hd * cfg.n_heads)
+    assert layer.tiles["mac8"] == attn_macs + expect_ffn
+
+
+def test_decode_context_exceeds_prefill_average():
+    cfg = get_config("qwen1.5-4b")
+    dec = W.lower_config(cfg, SHAPES["decode_32k"]).macs_per_token()
+    pre = W.lower_config(cfg, SHAPES["prefill_32k"]).macs_per_token()
+    assert dec > pre  # decode attends the full context, prefill averages
+
+
+# ----------------------- pricing through the kernels -----------------------
+
+
+def test_evaluate_lowered_prices_through_suite_kernels():
+    lowered = W.lower_config(get_config("mamba2-780m"), SHAPES["decode_32k"])
+    res = W.evaluate_lowered(lowered)
+    lib_names = {t.name for t in TOPOLOGY_LIBRARY}
+    for prim in W.primitive_stats():
+        assert res.winners[prim] in lib_names
+        assert np.isfinite(res.tile_energy_nj[prim])
+        assert res.tile_latency_ns[prim] > 0
+    assert res.energy_per_token_j > 0
+    assert res.latency_per_token_s > 0
+    # per-layer parts sum to the totals
+    assert res.energy_per_token_j == pytest.approx(
+        sum(l["energy_per_token_j"] for l in res.per_layer))
+    assert res.latency_per_token_s == pytest.approx(
+        sum(l["latency_per_token_s"] for l in res.per_layer))
+    # doubling the parallel units halves latency, leaves energy alone
+    res2 = W.evaluate_lowered(lowered, n_units=2 * res.n_units)
+    assert res2.energy_per_token_j == pytest.approx(res.energy_per_token_j)
+    assert res2.latency_per_token_s == pytest.approx(
+        res.latency_per_token_s / 2)
+
+
+# ------------------------- traced roofline sweep ---------------------------
+
+
+def test_sweep_roofline_trace_discipline_and_monotonicity():
+    cost = S.token_cost(get_config("qwen1.5-4b"), SHAPES["decode_32k"])
+    # unique sweep length to force exactly one fresh trace in this test
+    bw1 = np.linspace(2e11, 2e12, 7)
+    bw2 = np.linspace(3e11, 3e12, 7)
+    c0 = TRACE_COUNTS["roofline_sweep"]
+    out1 = S.sweep_roofline(cost, hbm_bw=bw1)
+    c1 = TRACE_COUNTS["roofline_sweep"]
+    out2 = S.sweep_roofline(cost, hbm_bw=bw2)
+    c2 = TRACE_COUNTS["roofline_sweep"]
+    assert c1 - c0 == 1, "an N-point BW sweep must cost exactly one trace"
+    assert c2 - c1 == 0, "changing only BW values must not retrace"
+    assert np.all(np.diff(out1["memory_s"]) < 0)  # more BW -> less time
+    assert np.all(out1["token_s"] >= out1["memory_s"])
+    assert np.all(out2["compute_s"] == out1["compute_s"])  # flops unchanged
+
+
+def test_sweep_roofline_zero_link_bw_is_single_chip():
+    cost = dict(flops=1e12, hbm_bytes=1e9, link_bytes=5e9)
+    out = S.sweep_roofline(cost, hbm_bw=8e11, link_bw=0.0)
+    assert out["collective_s"][0] == 0.0
+    out2 = S.sweep_roofline(cost, hbm_bw=8e11, link_bw=5e10)
+    assert out2["collective_s"][0] == pytest.approx(0.1)
+
+
+def test_token_cost_from_dryrun_record():
+    rec = dict(n_chips=4, roofline=dict(flops=8e12, hbm_bytes=4e9,
+                                        link_bytes=2e9))
+    shape = SHAPES["decode_32k"]  # 128 sequences, 1 token each
+    cost = S.token_cost_from_dryrun(rec, shape)
+    assert cost["flops"] == pytest.approx(8e12 * 4 / 128)
+    assert cost["link_bytes"] == pytest.approx(2e9 * 4 / 128)
+
+
+# --------------------------- end-to-end compare ----------------------------
+
+
+def test_compare_system_record():
+    rec = S.compare_system("mamba2-780m", "decode_32k",
+                           hbm_bw_sweep=[4e11, 8e11, 1.6e12])
+    assert rec["conserved"]
+    assert rec["macs_per_token"] > 0
+    for side in ("rcim", "baseline"):
+        assert rec[side]["energy_per_token_j"] > 0
+        assert rec[side]["latency_per_token_s"] > 0
+    assert np.isfinite(rec["energy_ratio_rcim_over_accel"])
+    assert np.isfinite(rec["latency_ratio_rcim_over_accel"])
+    assert rec["baseline"]["bottleneck"] in S.BOTTLENECKS
+    mem = rec["bw_sweep"]["memory_s"]
+    assert mem == sorted(mem, reverse=True)
+    import json
+
+    json.dumps(rec)  # record must be JSON-serializable for the bench

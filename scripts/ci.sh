@@ -57,6 +57,76 @@ echo "skipped tests: ${n_skipped} (see runs/pytest.log for reasons)"
 echo "== docs link check =="
 python scripts/check_links.py
 
+echo "== jit-discipline static analyzer (src tree + registered kernels) =="
+# Fails (set -e) on any finding not in the checked-in baseline; the
+# baseline is empty, so the tree must be *actually* clean.
+python -m repro.analysis.lint --format json | tee runs/lint.json
+python - <<'EOF'
+import json
+with open("runs/lint.json") as f:
+    r = json.load(f)
+c = r["counts"]
+assert c["new"] == 0, f"{c['new']} new lint finding(s)"
+print(f"lint: {c['new']} new, {c['baselined']} baselined, "
+      f"{c['total']} total finding(s)")
+EOF
+
+echo "== static analyzer: every seeded-violation fixture must fail =="
+# One fixture per rule (tests/lint_fixtures/); a rule that stops firing
+# on its own seed is a dead rule, so each must exit non-zero.
+for fx in tests/lint_fixtures/fx_ast_*.py; do
+    if python -m repro.analysis.lint --no-jaxpr --baseline "" "$fx" >/dev/null 2>&1; then
+        echo "FAIL: $fx passed the AST lint (seeded violation did not fire)"
+        exit 1
+    fi
+done
+for fx in tests/lint_fixtures/fx_jaxpr_*.py; do
+    if python -m repro.analysis.lint --no-ast --baseline "" --kernels-from "$fx" >/dev/null 2>&1; then
+        echo "FAIL: $fx passed the jaxpr lint (seeded violation did not fire)"
+        exit 1
+    fi
+done
+echo "all seeded fixtures correctly rejected"
+
+echo "== static analyzer: guard flip checks on src/repro/core/batch.py =="
+# The annotations must actually be guarding: strip one host-boundary
+# annotation / one trace-counter increment from a *copy* of batch.py
+# and the lint run must flip from green to failing.
+lint_tmp=$(mktemp -d)
+trap 'rm -rf "$lint_tmp"' EXIT
+python - "$lint_tmp" <<'EOF'
+import os, sys
+src = open("src/repro/core/batch.py").read()
+d = sys.argv[1]
+ann = "  # repro: host-boundary\n"
+assert ann in src, "no trailing host-boundary annotation to strip"
+with open(os.path.join(d, "strip_annotation.py"), "w") as f:
+    f.write(src.replace(ann, "\n", 1))
+cnt = 'TRACE_COUNTS["schedule_grid"] += 1'
+assert cnt in src, "no schedule_grid trace-counter increment to strip"
+with open(os.path.join(d, "strip_counter.py"), "w") as f:
+    f.write(src.replace(cnt, "", 1))
+EOF
+for f in strip_annotation strip_counter; do
+    if python -m repro.analysis.lint --no-jaxpr --baseline "" "$lint_tmp/$f.py" >/dev/null 2>&1; then
+        echo "FAIL: $f copy of batch.py still passes — the lint is not guarding"
+        exit 1
+    fi
+done
+rm -rf "$lint_tmp"
+trap - EXIT
+echo "both stripped copies correctly rejected"
+
+# Style gate (pyproject [tool.ruff]); best-effort like the hypothesis
+# install above: air-gapped runners without ruff warn and skip rather
+# than fail — the jit-discipline lint above is the load-bearing gate.
+if command -v ruff >/dev/null 2>&1; then
+    echo "== ruff check =="
+    ruff check src tests benchmarks scripts
+else
+    echo "warning: ruff not installed; style gate SKIPPED (pip install ruff to enable)"
+fi
+
 if [[ "$RUN_BENCH" == 1 ]]; then
     echo "== suite-level explorer bench (smoke, cache cold + warm) =="
     python -m benchmarks.bench_explorer --smoke --out runs/BENCH_explorer_smoke.json

@@ -1,0 +1,29 @@
+"""Static analysis of the repo's jit discipline.
+
+The exploration engine's performance contract is enforced at runtime by
+trace counters and bench assertions; this package proves the same
+invariants *before* runtime:
+
+  * `registry`   — the unified kernel registry: the single TRACE_COUNTS
+    counter every kernel module increments, per-kernel ownership
+    metadata, and representative-shape builders for abstract tracing;
+  * `jaxpr_lint` — layer 1: abstract-traces every registered kernel and
+    walks the ClosedJaxpr for dtype drift off float64, host callbacks
+    inside jit, oversized baked constants (recompile hazards), and
+    donation / static-argnum problems;
+  * `ast_lint`   — layer 2: walks source ASTs for repo-specific bug
+    classes (unannotated host syncs, truthiness on `__len__`-bearing
+    tables, jit wrappers that skip the trace counter);
+  * `lint`       — the CLI (``python -m repro.analysis.lint``) with a
+    checked-in baseline for grandfathered findings; CI fails on any new
+    violation.
+"""
+
+from .registry import (  # noqa: F401 - re-exported API
+    TRACE_COUNTS,
+    count_trace,
+    kernel_specs,
+    register_counter,
+    register_kernel,
+    trace_counts,
+)

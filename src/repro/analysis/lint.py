@@ -1,0 +1,124 @@
+"""CLI: ``python -m repro.analysis.lint [paths...]``.
+
+Runs both analyzer layers — the jaxpr lint over the registered kernels
+and the AST lint over the given paths (default ``src/``) — diffs the
+findings against the checked-in baseline, and exits non-zero iff any
+*new* (non-grandfathered) finding exists.
+
+Flags:
+  ``--format text|json``   output format (json includes counts + findings)
+  ``--baseline PATH``      baseline file (default
+                           ``src/repro/analysis/baseline.json``;
+                           ``--baseline ""`` disables baselining)
+  ``--write-baseline``     rewrite the baseline to grandfather the
+                           current findings instead of failing
+  ``--no-jaxpr``           skip layer 1 (no kernel imports / tracing)
+  ``--no-ast``             skip layer 2
+  ``--kernels-from M``     kernel module (dotted name or ``.py`` path)
+    to lint instead of the default registry modules; repeatable
+  ``--const-bytes N``      baked-constant size threshold (default 65536)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .findings import load_baseline, split_baselined, write_baseline
+
+_DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def _repo_root() -> str:
+    # src/repro/analysis/lint.py -> repo root is three dirs above src/
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="jit-discipline static analyzer (jaxpr + AST layers)",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="files/directories for the AST layer (default: src/)",
+    )
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=_DEFAULT_BASELINE)
+    ap.add_argument("--write-baseline", action="store_true")
+    ap.add_argument("--no-jaxpr", action="store_true")
+    ap.add_argument("--no-ast", action="store_true")
+    ap.add_argument(
+        "--kernels-from",
+        action="append",
+        default=None,
+        metavar="MODULE",
+        help="kernel module (dotted or .py path) for the jaxpr layer",
+    )
+    ap.add_argument("--const-bytes", type=int, default=65536)
+    args = ap.parse_args(argv)
+
+    root = _repo_root()
+    findings = []
+
+    if not args.no_ast:
+        from .ast_lint import lint_paths
+
+        paths = args.paths or [os.path.join(root, "src")]
+        findings.extend(lint_paths(paths, root=root))
+
+    if not args.no_jaxpr:
+        from .jaxpr_lint import lint_kernels
+
+        findings.extend(
+            lint_kernels(args.kernels_from, const_bytes=args.const_bytes)
+        )
+
+    baseline_path = args.baseline or None
+    if args.write_baseline:
+        if not baseline_path:
+            print("--write-baseline requires --baseline", file=sys.stderr)
+            return 2
+        write_baseline(baseline_path, findings)
+        print(
+            f"baseline written: {len(findings)} finding(s) grandfathered "
+            f"-> {baseline_path}"
+        )
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, grandfathered = split_baselined(findings, baseline)
+
+    if args.format == "json":
+        print(
+            json.dumps(
+                {
+                    "new": [f.as_dict() for f in new],
+                    "baselined": [f.as_dict() for f in grandfathered],
+                    "counts": {
+                        "new": len(new),
+                        "baselined": len(grandfathered),
+                        "total": len(findings),
+                    },
+                },
+                indent=1,
+            )
+        )
+    else:
+        for f in new:
+            print(f.format())
+        for f in grandfathered:
+            print(f"{f.format()} [baselined]")
+        print(
+            f"{len(new)} new finding(s), "
+            f"{len(grandfathered)} baselined, {len(findings)} total"
+        )
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -64,6 +64,8 @@ from typing import Mapping, NamedTuple, Sequence
 
 import numpy as np
 
+from repro.analysis import registry as _registry
+
 from .aig import AigStats
 from .mapping import BITS_PER_GATE, macros_per_type
 from .sram import (
@@ -119,13 +121,19 @@ def jax_available() -> bool:
 # Per-kernel jit trace counters.  The counter lines inside the kernel
 # bodies execute only while jax is *tracing* (never on cached dispatch),
 # so a test can assert that an N-variant sweep — or a float-only model
-# change — costs exactly one (or zero) compilations.
-TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
+# change — costs exactly one (or zero) compilations.  The Counter itself
+# lives in the unified registry (`repro.analysis.registry`) so every
+# kernel module shares one namespace and the static analyzer can verify
+# the discipline; this module re-exports it under its historical name.
+# repro: kernel-module
+TRACE_COUNTS = _registry.TRACE_COUNTS
 
 
 def trace_counts() -> dict[str, int]:
-    """Snapshot of the per-kernel jit trace counters."""
-    return dict(TRACE_COUNTS)
+    """Snapshot of this module's per-kernel jit trace counters (the
+    scope the helper has always had — other modules' kernels tracing in
+    between does not perturb whole-snapshot comparisons)."""
+    return _registry.trace_counts(module=__name__)
 
 
 class ModelParams(NamedTuple):
@@ -766,6 +774,7 @@ class _LazyArrays:
     def __getattribute__(self, name):
         val = object.__getattribute__(self, name)
         if name in _LAZY_FIELDS and not isinstance(val, np.ndarray):
+            # repro: host-boundary — lazy-grid materialization on first access
             val = np.asarray(val)
             object.__setattr__(self, name, val)
         return val
@@ -781,6 +790,7 @@ class _LazyArrays:
         moves a single scalar across the boundary — the full tensor is
         NOT materialized (and stays lazy for later accesses).
         """
+        # repro: host-boundary — single-scalar device gather
         return float(np.asarray(self._raw(name)[idx]))
 
 
@@ -877,13 +887,13 @@ class ExplorationGrid(_LazyArrays):
             cycles=int(g("cycles", (t, r))),
             active_macro_cycles=int(g("active_macro_cycles", (t, r))),
             fits=bool(g("fits", (t, r))),
-            feasible=bool(np.asarray(self._raw("feasible")[t])),
+            feasible=bool(np.asarray(self._raw("feasible")[t])),  # repro: host-boundary
             latency_ns=g("latency_ns", (t, r)),
             energy_nj=g("energy_nj", (t, r)),
             power_mw=g("power_mw", (t, r)),
             throughput_gops=g("throughput_gops", (t, r)),
             tops_per_watt=g("tops_per_watt", (t, r)),
-            area_mm2=float(np.asarray(self._raw("area_mm2")[t])),
+            area_mm2=float(np.asarray(self._raw("area_mm2")[t])),  # repro: host-boundary
         )
 
 
@@ -984,13 +994,13 @@ class VariationGrid(_LazyArrays):
             cycles=int(g("cycles", (t, r))),
             active_macro_cycles=int(g("active_macro_cycles", (t, r))),
             fits=bool(g("fits", (t, r))),
-            feasible=bool(np.asarray(self._raw("feasible")[t])),
+            feasible=bool(np.asarray(self._raw("feasible")[t])),  # repro: host-boundary
             latency_ns=g("latency_ns", (v, t, r)),
             energy_nj=g("energy_nj", (v, t, r)),
             power_mw=g("power_mw", (v, t, r)),
             throughput_gops=g("throughput_gops", (v, t, r)),
             tops_per_watt=g("tops_per_watt", (v, t, r)),
-            area_mm2=float(np.asarray(self._raw("area_mm2")[v, t])),
+            area_mm2=float(np.asarray(self._raw("area_mm2")[v, t])),  # repro: host-boundary
         )
 
 
@@ -1014,9 +1024,9 @@ def schedule_batch(
             topos.rows, discipline,
         )
         return dict(
-            cycles=np.asarray(cycles).T,
-            active_macro_cycles=np.asarray(active).T,
-            fits=np.asarray(fits).T,
+            cycles=np.asarray(cycles).T,  # repro: host-boundary
+            active_macro_cycles=np.asarray(active).T,  # repro: host-boundary
+            fits=np.asarray(fits).T,  # repro: host-boundary
         )
 
 
@@ -1198,13 +1208,13 @@ class SuiteGrid(_LazyArrays):
             cycles=int(g("cycles", (c, t, r))),
             active_macro_cycles=int(g("active_macro_cycles", (c, t, r))),
             fits=bool(g("fits", (c, t, r))),
-            feasible=bool(np.asarray(self._raw("feasible")[c, t])),
+            feasible=bool(np.asarray(self._raw("feasible")[c, t])),  # repro: host-boundary
             latency_ns=g("latency_ns", (c, t, r)),
             energy_nj=g("energy_nj", (c, t, r)),
             power_mw=g("power_mw", (c, t, r)),
             throughput_gops=g("throughput_gops", (c, t, r)),
             tops_per_watt=g("tops_per_watt", (c, t, r)),
-            area_mm2=float(np.asarray(self._raw("area_mm2")[t])),
+            area_mm2=float(np.asarray(self._raw("area_mm2")[t])),  # repro: host-boundary
         )
 
 
@@ -1224,9 +1234,9 @@ def schedule_suite(
             topos.rows, discipline,
         )
         return dict(
-            cycles=np.swapaxes(np.asarray(cycles), 1, 2),
-            active_macro_cycles=np.swapaxes(np.asarray(active), 1, 2),
-            fits=np.swapaxes(np.asarray(fits), 1, 2),
+            cycles=np.swapaxes(np.asarray(cycles), 1, 2),  # repro: host-boundary
+            active_macro_cycles=np.swapaxes(np.asarray(active), 1, 2),  # repro: host-boundary
+            fits=np.swapaxes(np.asarray(fits), 1, 2),  # repro: host-boundary
         )
 
 
@@ -1349,13 +1359,13 @@ class SuiteVariationGrid(_LazyArrays):
             cycles=int(g("cycles", (c, t, r))),
             active_macro_cycles=int(g("active_macro_cycles", (c, t, r))),
             fits=bool(g("fits", (c, t, r))),
-            feasible=bool(np.asarray(self._raw("feasible")[c, t])),
+            feasible=bool(np.asarray(self._raw("feasible")[c, t])),  # repro: host-boundary
             latency_ns=g("latency_ns", (c, v, t, r)),
             energy_nj=g("energy_nj", (c, v, t, r)),
             power_mw=g("power_mw", (c, v, t, r)),
             throughput_gops=g("throughput_gops", (c, v, t, r)),
             tops_per_watt=g("tops_per_watt", (c, v, t, r)),
-            area_mm2=float(np.asarray(self._raw("area_mm2")[v, t])),
+            area_mm2=float(np.asarray(self._raw("area_mm2")[v, t])),  # repro: host-boundary
         )
 
 
@@ -1614,7 +1624,7 @@ def _shard_variants(
         return params, False
     from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-    mesh = Mesh(np.asarray(devs[:n]), ("variants",))
+    mesh = Mesh(np.asarray(devs[:n]), ("variants",))  # repro: host-boundary
     spec = NamedSharding(mesh, PartitionSpec("variants"))
     return jax.device_put(params, spec), True
 
@@ -1652,15 +1662,15 @@ def _fetch_selection(res, sharded: bool) -> SelectionResult:
     """Materialize the small selection payload (this is the only
     device->host transfer of the fused path) and apply the host-side
     all-non-finite check that `select_best_batch` raises eagerly."""
-    has_finite = np.asarray(res["has_finite"])
+    has_finite = np.asarray(res["has_finite"])  # repro: host-boundary
     if not has_finite.all():
         raise ValueError(
             "fused selection: a batch cell has no finite energies"
         )
-    winner_idx = np.asarray(res["winner_idx"])
-    winner_mets = {k: np.asarray(v) for k, v in res["winner_mets"].items()}
-    nominal_latency = np.asarray(res["nominal_latency"])
-    nominal_fits = np.asarray(res["nominal_fits"])
+    winner_idx = np.asarray(res["winner_idx"])  # repro: host-boundary
+    winner_mets = {k: np.asarray(v) for k, v in res["winner_mets"].items()}  # repro: host-boundary
+    nominal_latency = np.asarray(res["nominal_latency"])  # repro: host-boundary
+    nominal_fits = np.asarray(res["nominal_fits"])  # repro: host-boundary
     payload = (
         winner_idx.nbytes
         + has_finite.nbytes
@@ -1803,26 +1813,37 @@ def select_best_batch_device(
     _load_jax()
     if _SELECT_BATCH is None:
         _SELECT_BATCH = _make_select_batch()
-    energy = np.asarray(energy, dtype=np.float64)
+
+    def host_cast(x, dtype):
+        # Device arrays (the service's re-rank path) go straight into
+        # the jitted reduction — forcing them through np.asarray here
+        # would materialize the full (V, N) tensors per request, the
+        # exact transfer the device-side selection exists to avoid.
+        if isinstance(x, jax.Array):
+            return x
+        return np.asarray(x, dtype=dtype)  # repro: host-boundary
+
+    energy = host_cast(energy, np.float64)
     if energy.size == 0 or energy.shape[-1] == 0:
         raise ValueError("select_best_batch on an empty grid")
-    fits = np.asarray(fits, dtype=bool)
+    fits = host_cast(fits, bool)
     use_latency = max_latency is not None and latency is not None
     with enable_x64():
         idx, has_finite = _SELECT_BATCH(
             energy,
             fits,
-            np.asarray(feasible, dtype=bool) if feasible is not None else fits,
+            host_cast(feasible, bool) if feasible is not None else fits,
             # scalar dummy: the use_latency=False graph never reads it,
             # and a scalar avoids shipping the energy array twice
-            np.asarray(latency, dtype=np.float64)
+            host_cast(latency, np.float64)
             if use_latency
             else np.float64(0.0),
             np.float64(max_latency if use_latency else 0.0),
             use_latency,
         )
-        idx = np.asarray(idx, dtype=np.int64)
-        has_finite = np.asarray(has_finite)
+        # winner payload only — (…, V) indices + flags, never the grid
+        idx = np.asarray(idx, dtype=np.int64)  # repro: host-boundary
+        has_finite = np.asarray(has_finite)  # repro: host-boundary
     if not has_finite.all():
         raise ValueError(
             "select_best_batch: a batch cell has no finite energies"
@@ -2028,3 +2049,137 @@ def table2_batch(
             w[None, :], topos.area_mm2(model), shim, nor_fraction
         )
     return table2_arrays(w, topos.area_mm2(model), model, nor_fraction)
+
+
+# ---------------------------------------------------------------------------
+# Kernel registration (static analyzer)
+# ---------------------------------------------------------------------------
+# Each builder returns a *fresh* jit wrapper plus small-but-representative
+# operands; `repro.analysis.jaxpr_lint` abstract-traces through them (no
+# device work) to verify the trace-counter, dtype, const, and donation
+# discipline of every kernel at lint time.
+
+
+def _example_operands() -> dict:
+    """Tiny but shape-representative kernel operands: T=2 topologies,
+    R=2 recipes, L=4 levels, V=2 model variants, C=2 circuits — the same
+    dtypes and axis layout production tables carry."""
+    _load_jax()
+    lvl = np.array(
+        [[2, 1, 0], [1, 0, 1], [1, 2, 1], [0, 1, 1]], dtype=np.int32
+    )                                                    # (L, 3)
+    ops = np.stack([lvl, lvl[::-1]])                     # (R, L, 3)
+    v = 2
+    params = ModelParams(
+        f_clk_hz=np.full((v,), 1.0e9),
+        e_op_marginal_fj=np.full((v, 3), 5.0),
+        p_ctrl_mw=np.full((v,), 0.1),
+        e_macro_cycle_fj=np.full((v,), 10.0),
+        e_col_cycle_fj=np.full((v,), 1.0),
+        alpha_mw_per_level=np.full((v,), 0.01),
+        pipeline_utilization=np.full((v,), 0.9),
+    )
+    return dict(
+        ops=ops,
+        n_levels=np.array([4, 3], dtype=np.int32),
+        width=np.array([4, 8], dtype=np.int32),
+        mpt=np.array([[1, 1, 1], [2, 1, 1]], dtype=np.int32),
+        is_single=np.array([True, False]),
+        total_bits=np.array([1024, 4096], dtype=np.int32),
+        rows=np.array([16, 32], dtype=np.int32),
+        cols=np.array([16, 32], dtype=np.int32),
+        params=params,
+        suite_ops=np.stack([ops, ops]),                  # (C, R, L, 3)
+        suite_n_levels=np.array([[4, 3], [3, 4]], dtype=np.int32),
+        feasible=np.array([True, True]),
+        suite_feasible=np.ones((2, 2), dtype=bool),
+        max_latency=np.float64(1.0e6),
+    )
+
+
+def _sched_args(o, suite):
+    ops = o["suite_ops"] if suite else o["ops"]
+    nl = o["suite_n_levels"] if suite else o["n_levels"]
+    return (
+        ops, nl, o["width"], o["mpt"], o["is_single"], o["total_bits"],
+        o["rows"],
+    )
+
+
+def _ex_schedule(maker, suite):
+    def build():
+        o = _example_operands()
+        return _registry.KernelExample(
+            fn=maker(),
+            args=_sched_args(o, suite),
+            statics={"discipline": "list"},
+        )
+
+    return build
+
+
+def _ex_evaluate(maker, suite):
+    def build():
+        o = _example_operands()
+        return _registry.KernelExample(
+            fn=maker(),
+            args=_sched_args(o, suite) + (o["cols"], o["params"]),
+            statics={"discipline": "list", "mode": "physical"},
+        )
+
+    return build
+
+
+def _ex_fused(maker, suite):
+    def build():
+        o = _example_operands()
+        feas = o["suite_feasible"] if suite else o["feasible"]
+        return _registry.KernelExample(
+            fn=maker(),
+            args=_sched_args(o, suite)
+            + (o["cols"], o["params"], feas, o["max_latency"]),
+            statics={
+                "discipline": "list", "mode": "physical",
+                "use_latency": True,
+            },
+            # mirror _jit_fused's backend gate: donation only declared
+            # where XLA can use it
+            donate_argnames=()
+            if jax.default_backend() == "cpu"
+            else ("params",),
+        )
+
+    return build
+
+
+def _ex_select_batch():
+    _load_jax()
+    energy = np.array([[1.0, 2.0, 3.0], [3.0, 1.0, 2.0]])     # (V, N)
+    masks = np.array([[True, True, False]])                    # (1, N)
+    latency = np.full((2, 3), 5.0)
+    return _registry.KernelExample(
+        fn=_make_select_batch(),
+        args=(energy, masks, masks, latency, np.float64(10.0)),
+        statics={"use_latency": True},
+    )
+
+
+_registry.register_kernel(
+    "schedule_grid", __name__, _ex_schedule(_make_schedule_grid, False)
+)
+_registry.register_kernel(
+    "schedule_suite", __name__, _ex_schedule(_make_schedule_suite, True)
+)
+_registry.register_kernel(
+    "evaluate_grid", __name__, _ex_evaluate(_make_evaluate_grid, False)
+)
+_registry.register_kernel(
+    "evaluate_suite", __name__, _ex_evaluate(_make_evaluate_suite, True)
+)
+_registry.register_kernel(
+    "fused_grid", __name__, _ex_fused(_make_fused_grid, False)
+)
+_registry.register_kernel(
+    "fused_suite", __name__, _ex_fused(_make_fused_suite, True)
+)
+_registry.register_kernel("select_batch", __name__, _ex_select_batch)

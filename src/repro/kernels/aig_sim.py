@@ -49,23 +49,26 @@ the trace count.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 from typing import Sequence
 
 import numpy as np
 
+from repro.analysis import registry as _registry
 from repro.core.aig import Aig, _elementary_int, lit_node, lit_phase
 
 #: Traced-call counters (incremented inside the traced function bodies, so
 #: they count *compiles*, not calls) — same discipline as core/batch.py.
-TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
+#: The Counter lives in the unified registry; this module re-exports it.
+# repro: kernel-module
+TRACE_COUNTS = _registry.TRACE_COUNTS
 
 
 def trace_counts() -> dict[str, int]:
-    """Snapshot of the jit trace counters (for tests / benchmarks)."""
-    return dict(TRACE_COUNTS)
+    """Snapshot of this module's jit trace counters (for tests /
+    benchmarks) — scoped to the aig kernels, as it always was."""
+    return _registry.trace_counts(module=__name__)
 
 
 # (max vars, uint32 words) shape tiers for truth-table queries.  A query
@@ -271,10 +274,10 @@ _JNP_MEGA = None
 _JNP_SIG = None
 
 
-def _jnp_mega_fn():
-    global _JNP_MEGA
-    if _JNP_MEGA is not None:
-        return _JNP_MEGA
+def _make_jnp_mega():
+    """A fresh jit wrapper around the mega-program evaluator (fresh =
+    empty trace cache, as the analyzer's counter check requires);
+    production goes through `_jnp_mega_fn`'s process-wide cache."""
     _jax_setup()
     import jax
     import jax.numpy as jnp
@@ -308,14 +311,19 @@ def _jnp_mega_fn():
         phase = (full * (rootp & 1).astype(jnp.uint32))[:, None]
         return vals[rootp >> 1] ^ phase
 
-    _JNP_MEGA = jax.jit(eval_mega)
+    return jax.jit(eval_mega)
+
+
+def _jnp_mega_fn():
+    global _JNP_MEGA
+    if _JNP_MEGA is None:
+        _JNP_MEGA = _make_jnp_mega()
     return _JNP_MEGA
 
 
-def _jnp_sig_fn():
-    global _JNP_SIG
-    if _JNP_SIG is not None:
-        return _JNP_SIG
+def _make_jnp_sig():
+    """Fresh jit wrapper for the signature evaluator (see
+    `_make_jnp_mega`)."""
     _jax_setup()
     import jax
     import jax.numpy as jnp
@@ -334,7 +342,13 @@ def _jnp_sig_fn():
         vals, _ = jax.lax.scan(step, vals0, waves)
         return vals
 
-    _JNP_SIG = jax.jit(sig_eval)
+    return jax.jit(sig_eval)
+
+
+def _jnp_sig_fn():
+    global _JNP_SIG
+    if _JNP_SIG is None:
+        _JNP_SIG = _make_jnp_sig()
     return _JNP_SIG
 
 
@@ -513,8 +527,8 @@ def _eval_mega_tier(
 
     k_max = next(km for km, tw in _TIERS if tw == w)
     dev_elem = _dev_elem(k_max)
-    f0 = np.asarray(aig._f0, dtype=np.int64)
-    f1 = np.asarray(aig._f1, dtype=np.int64)
+    f0 = np.asarray(aig._f0, dtype=np.int64)  # repro: host-boundary
+    f1 = np.asarray(aig._f1, dtype=np.int64)  # repro: host-boundary
     sizes = mem.sum(axis=1).astype(np.int64)
     budget = _MEGA_BUDGET[w]
     wave_m = _MEGA_WAVE[w]
@@ -539,11 +553,11 @@ def _eval_mega_tier(
         if len(chunk) == len(idxs):
             cm, counts = mem, sizes
         else:
-            sel = np.asarray(chunk, dtype=np.int64)
+            sel = np.asarray(chunk, dtype=np.int64)  # repro: host-boundary
             cm, counts = mem[sel], sizes[sel]
         it = [items[idxs[p]] for p in chunk]
-        k_b = np.array([len(s) for _, s in it], dtype=np.int64)
-        r_b = np.array([len(r) for r, _ in it], dtype=np.int64)
+        k_b = np.array([len(s) for _, s in it], dtype=np.int64)  # repro: host-boundary
+        r_b = np.array([len(r) for r, _ in it], dtype=np.int64)  # repro: host-boundary
         row_base = 1 + np.concatenate(([0], np.cumsum(k_b + counts)[:-1]))
         n_rows = int(1 + (k_b + counts).sum())
         n_rows_pad = _next_pow2(n_rows + 1, floor=10)
@@ -609,7 +623,7 @@ def _eval_mega_tier(
         n_q_pad = _next_pow2(n_q, floor=6)
         rootp = np.zeros(n_q_pad, dtype=np.int32)
         rootp[:n_q] = (root_rows.astype(np.int64) << 1) | (root_lits & 1)
-        out = np.asarray(
+        out = np.asarray(  # repro: host-boundary
             fn(
                 jnp.asarray(waves),
                 jnp.asarray(pin_rows),
@@ -719,13 +733,13 @@ def _eval_pallas(
             pin = np.full((chunk, prog.n_pad), -1, dtype=np.int32)
             # Scatter all supports at once: (item row, support node) -> var.
             sup_nodes = np.concatenate(
-                [np.asarray(items[i][1], dtype=np.int64) for i in batch]
+                [np.asarray(items[i][1], dtype=np.int64) for i in batch]  # repro: host-boundary
             )
-            sup_lens = np.array([len(items[i][1]) for i in batch])
+            sup_lens = np.array([len(items[i][1]) for i in batch])  # repro: host-boundary
             item_rows = np.repeat(np.arange(n_b), sup_lens)
             var_idx = np.concatenate([np.arange(l) for l in sup_lens])
             pin[item_rows, sup_nodes] = var_idx
-            root_lits_a = np.array([items[i][0] for i in batch], dtype=np.int64)
+            root_lits_a = np.array([items[i][0] for i in batch], dtype=np.int64)  # repro: host-boundary
             roots_a = np.zeros((chunk, n_roots), dtype=np.int32)
             roots_a[:n_b] = root_lits_a >> 1
             phase_a = np.zeros((chunk, n_roots), dtype=np.int32)
@@ -740,7 +754,7 @@ def _eval_pallas(
                 n_roots=n_roots,
                 interpret=_pallas_interpret(),
             )
-            out = np.asarray(out).view(np.uint32)
+            out = np.asarray(out).view(np.uint32)  # repro: host-boundary
             out = out.reshape(chunk, n_roots, w)
             for bi, idx in enumerate(batch):
                 root_lits, support = items[idx]
@@ -784,10 +798,50 @@ def node_signatures(
     prog = program if program is not None else compile_aig(aig)
     import jax.numpy as jnp
 
-    patterns = np.asarray(patterns, dtype=np.uint64)
+    patterns = np.asarray(patterns, dtype=np.uint64)  # repro: host-boundary
     n_words = patterns.shape[1]
     vals0 = np.zeros((prog.n_pad, 2 * n_words), dtype=np.uint32)
     vals0[1 : 1 + prog.n_pis] = patterns.view("<u4")
     sig_fn = _jnp_sig_fn()
-    out = np.asarray(sig_fn(jnp.asarray(prog.waves), jnp.asarray(vals0)))
+    out = np.asarray(sig_fn(jnp.asarray(prog.waves), jnp.asarray(vals0)))  # repro: host-boundary
     return np.ascontiguousarray(out[: prog.n_nodes]).view("<u8")
+
+
+# ---------------------------------------------------------------------------
+# Kernel registration (static analyzer)
+# ---------------------------------------------------------------------------
+# The jnp engines register representative-shape builders so
+# `repro.analysis.jaxpr_lint` can abstract-trace them; the Pallas engine
+# registers its counter only (tracing a pallas_call needs the TPU
+# lowering machinery, and the AST layer already enforces its counter
+# discipline statically).  ``x64=False``: these kernels are pure uint32
+# bit algebra — there are no floats to drift.
+
+
+def _ex_aig_eval():
+    # plain numpy operands: jit traces them identically, and the builder
+    # then holds no device arrays at all
+    waves = np.zeros((2, 4, 4), dtype=np.int32)
+    waves[:, :, 3] = 7  # padding instructions write the scratch row
+    pin_rows = np.array([-1, 0, 1, -1, -1, -1, -1, -1], dtype=np.int32)
+    elem = np.ones((2, 1), dtype=np.uint32)
+    rootp = np.array([6 << 1, (5 << 1) | 1], dtype=np.int32)
+    return _registry.KernelExample(
+        fn=_make_jnp_mega(),
+        args=(waves, pin_rows, elem, rootp),
+    )
+
+
+def _ex_aig_sig():
+    waves = np.zeros((2, 4, 4), dtype=np.int32)
+    waves[:, :, 3] = 7
+    vals0 = np.zeros((8, 2), dtype=np.uint32)
+    return _registry.KernelExample(
+        fn=_make_jnp_sig(),
+        args=(waves, vals0),
+    )
+
+
+_registry.register_kernel("aig_eval", __name__, _ex_aig_eval, x64=False)
+_registry.register_kernel("aig_sig", __name__, _ex_aig_sig, x64=False)
+_registry.register_counter("aig_eval_pallas", __name__)

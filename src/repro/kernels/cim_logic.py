@@ -38,8 +38,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis import registry as _registry
+
+# repro: kernel-module
+TRACE_COUNTS = _registry.TRACE_COUNTS
+_registry.register_counter("cim_pallas", __name__)
+
 LANE = 128
 SUBLANE = 8
+
+
+def trace_counts() -> dict[str, int]:
+    """Snapshot of this module's jit trace counters."""
+    return _registry.trace_counts(module=__name__)
 
 
 def _cim_kernel(instr_ref, pi_ref, out_ref, scratch_ref, *, n_gates: int, n_pos: int):
@@ -91,6 +102,7 @@ def cim_pallas_call(
     block_words: int = 512,
     interpret: bool = True,
 ):
+    TRACE_COUNTS["cim_pallas"] += 1
     n_rows_p, n_words = pi_planes.shape
     assert n_rows_p == _round_up(n_rows, SUBLANE)
     assert n_words % block_words == 0, (n_words, block_words)

@@ -28,7 +28,12 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.batch import TRACE_COUNTS
+from repro.analysis import registry as _registry
+
+# The shared trace counter (see repro.analysis.registry); this module's
+# sweep kernel bumps ``TRACE_COUNTS["roofline_sweep"]``.
+# repro: kernel-module
+TRACE_COUNTS = _registry.TRACE_COUNTS
 from repro.core.workloads import (LoweredModel, SystemResult,
                                   conservation_report, evaluate_lowered,
                                   lower_config)
@@ -118,29 +123,53 @@ def token_cost_from_dryrun(record: dict, shape: ShapeConfig) -> dict:
 _SWEEP_FN = None
 
 
+def _make_sweep_kernel():
+    """A fresh jit wrapper for the roofline sweep (fresh = empty trace
+    cache, as the analyzer's counter check requires); production goes
+    through `_sweep_kernel`'s process-wide cache."""
+    import jax
+    import jax.numpy as jnp
+
+    def fn(flops, hbm_bytes, link_bytes, peak_flops, hbm_bw, link_bw):
+        TRACE_COUNTS["roofline_sweep"] += 1
+        compute = flops / peak_flops
+        memory = hbm_bytes / hbm_bw
+        coll = jnp.where(link_bw > 0,
+                         link_bytes / jnp.maximum(link_bw, 1.0), 0.0)
+        compute, memory, coll = jnp.broadcast_arrays(compute, memory, coll)
+        token_s = jnp.maximum(jnp.maximum(compute, memory), coll)
+        bottleneck = jnp.argmax(
+            jnp.stack([compute, memory, coll], axis=-1), axis=-1
+        )
+        return dict(compute_s=compute, memory_s=memory,
+                    collective_s=coll, token_s=token_s,
+                    bottleneck=bottleneck)
+
+    return jax.jit(fn)
+
+
 def _sweep_kernel():
     global _SWEEP_FN
     if _SWEEP_FN is None:
-        import jax
-        import jax.numpy as jnp
-
-        def fn(flops, hbm_bytes, link_bytes, peak_flops, hbm_bw, link_bw):
-            TRACE_COUNTS["roofline_sweep"] += 1
-            compute = flops / peak_flops
-            memory = hbm_bytes / hbm_bw
-            coll = jnp.where(link_bw > 0,
-                             link_bytes / jnp.maximum(link_bw, 1.0), 0.0)
-            compute, memory, coll = jnp.broadcast_arrays(compute, memory, coll)
-            token_s = jnp.maximum(jnp.maximum(compute, memory), coll)
-            bottleneck = jnp.argmax(
-                jnp.stack([compute, memory, coll], axis=-1), axis=-1
-            )
-            return dict(compute_s=compute, memory_s=memory,
-                        collective_s=coll, token_s=token_s,
-                        bottleneck=bottleneck)
-
-        _SWEEP_FN = jax.jit(fn)
+        _SWEEP_FN = _make_sweep_kernel()
     return _SWEEP_FN
+
+
+def _ex_roofline_sweep():
+    from repro.core import batch
+
+    batch._load_jax()
+    bw = np.array([1.0e11, 2.0e11])
+    return _registry.KernelExample(
+        fn=_make_sweep_kernel(),
+        args=(
+            np.float64(1.0e12), np.float64(1.0e9), np.float64(0.0),
+            np.float64(1.0e15), bw, bw,
+        ),
+    )
+
+
+_registry.register_kernel("roofline_sweep", __name__, _ex_roofline_sweep)
 
 
 BOTTLENECKS = ("compute", "memory", "collective")
@@ -160,8 +189,8 @@ def sweep_roofline(cost: dict,
     from repro.core import batch
 
     batch._load_jax()
-    hbm = np.atleast_1d(np.asarray(hbm_bw, np.float64))
-    link = np.atleast_1d(np.asarray(link_bw, np.float64))
+    hbm = np.atleast_1d(np.asarray(hbm_bw, np.float64))  # repro: host-boundary
+    link = np.atleast_1d(np.asarray(link_bw, np.float64))  # repro: host-boundary
     hbm, link = np.broadcast_arrays(hbm, link)
     with batch.enable_x64():
         out = _sweep_kernel()(
@@ -169,7 +198,8 @@ def sweep_roofline(cost: dict,
             np.float64(cost["link_bytes"]), np.float64(peak_flops),
             hbm, link,
         )
-        out = {k: np.asarray(v) for k, v in out.items()}
+        # roofline outputs are sweep-shaped (small): materialize for callers
+        out = {k: np.asarray(v) for k, v in out.items()}  # repro: host-boundary
     out["hbm_bw"] = hbm.copy()
     out["link_bw"] = link.copy()
     return out

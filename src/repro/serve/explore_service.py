@@ -61,6 +61,8 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+# repro: kernel-module — the service handles device-resident grids; all
+# host materializations must be annotated boundary crossings
 from repro.core.aig import Aig, AigStats
 from repro.core import batch as B
 from repro.core.batch import (
@@ -632,7 +634,8 @@ class ExplorationService:
             row = sg.variation(fp) if is_sweep else sg.grid(fp)
             energy = row._raw("energy_nj").reshape(-1, n)[-n_variants:]
             latency = row._raw("latency_ns").reshape(-1, n)[-n_variants:]
-            fits = np.asarray(row._raw("fits")).reshape(1, n)
+            # model-free capacity mask: (1, N) bools, cached per grid
+            fits = np.asarray(row._raw("fits")).reshape(1, n)  # repro: host-boundary
             self._grids[(fp, model_key)] = _GridEntry(
                 row=row,
                 energy=energy,
@@ -772,7 +775,7 @@ class ExplorationService:
         )
         # Device gathers: (V,) vectors are the only transfers here.
         with B.enable_x64():  # keep the f64 metrics undemoted
-            winner_energy = np.asarray(
+            winner_energy = np.asarray(  # repro: host-boundary
                 B.jnp.take_along_axis(
                     entry.energy, B.jnp.asarray(idx)[:, None], axis=-1
                 )
@@ -780,17 +783,17 @@ class ExplorationService:
         nominal_fits = bool(entry.fits[0, int(idx[0])])
         ok = np.full(len(idx), nominal_fits)
         if r.max_latency_ns is not None:
-            lat_nom = np.asarray(entry.latency[:, int(idx[0])])
+            lat_nom = np.asarray(entry.latency[:, int(idx[0])])  # repro: host-boundary
             ok &= lat_nom <= r.max_latency_ns
         return VariationSummary(
             n_variants=len(idx),
             winners=winners,
             winner_share=share,
             best_yield=best_yield,
-            latency_yield=float(np.mean(ok)),
+            latency_yield=float(np.mean(ok)),  # repro: host-boundary
             winner_energy_nj=winner_energy,
             energy_quantiles={
-                q: float(np.quantile(winner_energy, q))
+                q: float(np.quantile(winner_energy, q))  # repro: host-boundary
                 for q in ENERGY_QUANTILES
             },
         )

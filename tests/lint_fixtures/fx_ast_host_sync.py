@@ -1,0 +1,10 @@
+"""Seeds exactly one ``ast-host-sync-unannotated``: a bare np.asarray
+in a device-adjacent function of a kernel module."""
+# repro: kernel-module
+
+import numpy as np
+
+
+def gather_energy(grid):
+    dev = grid._raw("energy_nj")
+    return np.asarray(dev)  # VIOLATION: unannotated device->host sync

@@ -1,0 +1,16 @@
+"""Seeds exactly one ``ast-host-sync-in-jit``: float() on a traced
+value inside a jit-wrapped function."""
+
+import jax
+import jax.numpy as jnp
+
+import collections
+
+TRACE_COUNTS = collections.Counter()
+
+
+@jax.jit
+def kernel(x):
+    TRACE_COUNTS["kernel"] += 1
+    bad = float(x)  # VIOLATION: host sync inside a traced body
+    return jnp.sin(x) + bad

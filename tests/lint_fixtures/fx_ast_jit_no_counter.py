@@ -1,0 +1,10 @@
+"""Seeds exactly one ``ast-jit-no-counter``: a jit-wrapped function
+whose body never increments the registry trace counter."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def uncounted(x):  # VIOLATION: no TRACE_COUNTS/count_trace in the body
+    return jnp.cos(x) * 2.0

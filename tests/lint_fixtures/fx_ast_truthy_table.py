@@ -1,0 +1,8 @@
+"""Seeds exactly one ``ast-truthy-table``: an `or`-default on a
+__len__-bearing ModelTable (the PR-4 bug class)."""
+
+DEFAULT = object()
+
+
+def pick_model(model: "ModelTable"):
+    return model or DEFAULT  # VIOLATION: empty table is falsy

@@ -1,0 +1,28 @@
+"""Seeds exactly one ``jaxpr-baked-const``: a 512 KiB table closed over
+by the kernel instead of passed as a traced operand (the recompile
+hazard the lint's threshold guards)."""
+
+import numpy as np
+
+from repro.analysis import registry
+
+MODULE = "lint_fixture.baked_const"
+
+BIG_TABLE = np.ones((256, 256), dtype=np.float64)  # 512 KiB
+
+
+def _build():
+    import jax
+    import jax.numpy as jnp
+
+    def fn(x):
+        registry.TRACE_COUNTS["fx_baked_const"] += 1
+        # VIOLATION: BIG_TABLE is captured as a jaxpr constant
+        return jnp.sum(x * jnp.asarray(BIG_TABLE))
+
+    return registry.KernelExample(
+        fn=jax.jit(fn), args=(np.ones((256, 256), dtype=np.float64),)
+    )
+
+
+registry.register_kernel("fx_baked_const", MODULE, _build)

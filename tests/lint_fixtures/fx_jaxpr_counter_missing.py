@@ -1,0 +1,23 @@
+"""Seeds exactly one ``jaxpr-counter-missing``: the kernel body never
+bumps its registered trace counter, so tracing the fresh wrapper leaves
+the count unchanged."""
+
+import numpy as np
+
+from repro.analysis import registry
+
+MODULE = "lint_fixture.counter_missing"
+
+
+def _build():
+    import jax
+
+    def fn(x):  # VIOLATION: no TRACE_COUNTS bump in the traced body
+        return x + 1.0
+
+    return registry.KernelExample(
+        fn=jax.jit(fn), args=(np.ones(4, dtype=np.float64),)
+    )
+
+
+registry.register_kernel("fx_counter_missing", MODULE, _build)

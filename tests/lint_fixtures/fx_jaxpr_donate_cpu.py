@@ -1,0 +1,26 @@
+"""Seeds exactly one ``jaxpr-donate-cpu``: donated buffers declared
+unconditionally, without the per-backend gate `_jit_fused` uses — on
+the CPU backend XLA ignores donation and jax warns per call."""
+
+import numpy as np
+
+from repro.analysis import registry
+
+MODULE = "lint_fixture.donate_cpu"
+
+
+def _build():
+    import jax
+
+    def fn(params):
+        registry.TRACE_COUNTS["fx_donate_cpu"] += 1
+        return params * 2.0
+
+    return registry.KernelExample(
+        fn=jax.jit(fn, donate_argnames=("params",)),
+        args=(np.ones(4, dtype=np.float64),),
+        donate_argnames=("params",),  # VIOLATION: not gated on backend
+    )
+
+
+registry.register_kernel("fx_donate_cpu", MODULE, _build)

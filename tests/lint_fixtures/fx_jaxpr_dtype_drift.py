@@ -1,0 +1,25 @@
+"""Seeds exactly one ``jaxpr-dtype-drift``: an x64 kernel that casts
+its float64 operand down to float32 mid-graph."""
+
+import numpy as np
+
+from repro.analysis import registry
+
+MODULE = "lint_fixture.dtype_drift"
+
+
+def _build():
+    import jax
+    import jax.numpy as jnp
+
+    def fn(x):
+        registry.TRACE_COUNTS["fx_dtype_drift"] += 1
+        y = x.astype(jnp.float32)  # VIOLATION: sub-f64 cast in x64 kernel
+        return (y * 2.0).astype(jnp.float64)
+
+    return registry.KernelExample(
+        fn=jax.jit(fn), args=(np.ones(4, dtype=np.float64),)
+    )
+
+
+registry.register_kernel("fx_dtype_drift", MODULE, _build)

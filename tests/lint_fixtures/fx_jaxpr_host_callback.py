@@ -1,0 +1,29 @@
+"""Seeds exactly one ``jaxpr-host-callback``: a pure_callback host
+round-trip inside the jitted body."""
+
+import numpy as np
+
+from repro.analysis import registry
+
+MODULE = "lint_fixture.host_callback"
+
+
+def _build():
+    import jax
+    import jax.numpy as jnp
+
+    def fn(x):
+        registry.TRACE_COUNTS["fx_host_callback"] += 1
+        y = jax.pure_callback(  # VIOLATION: host callback per dispatch
+            lambda v: np.asarray(v) * 2.0,
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            x,
+        )
+        return jnp.sum(y)
+
+    return registry.KernelExample(
+        fn=jax.jit(fn), args=(np.ones(4, dtype=np.float64),)
+    )
+
+
+registry.register_kernel("fx_host_callback", MODULE, _build)

@@ -1,0 +1,26 @@
+"""Seeds exactly one ``jaxpr-static-unhashable``: a declared static
+argument whose example value is a list (jit statics key the compile
+cache and must hash)."""
+
+import numpy as np
+
+from repro.analysis import registry
+
+MODULE = "lint_fixture.static_unhashable"
+
+
+def _build():
+    import jax
+
+    def fn(x, mode):
+        registry.TRACE_COUNTS["fx_static_unhashable"] += 1
+        return x * 2.0
+
+    return registry.KernelExample(
+        fn=jax.jit(fn, static_argnames=("mode",)),
+        args=(np.ones(4, dtype=np.float64),),
+        statics={"mode": ["not", "hashable"]},  # VIOLATION
+    )
+
+
+registry.register_kernel("fx_static_unhashable", MODULE, _build)

@@ -17,11 +17,12 @@ def main() -> None:
     ap.add_argument("--scale", choices=["tiny", "default", "paper"], default="tiny")
     ap.add_argument("--only", default=None,
                     help="comma list: fig9,table1,table2,variation,kernel,"
-                         "roofline,explorer,characterization,service,system")
+                         "roofline,explorer,characterization,service,"
+                         "system,faults")
     args = ap.parse_args()
     which = set(args.only.split(",")) if args.only else {
         "fig9", "table1", "table2", "variation", "kernel", "roofline",
-        "explorer", "characterization", "service", "system",
+        "explorer", "characterization", "service", "system", "faults",
     }
 
     from .common import Csv
@@ -88,6 +89,13 @@ def main() -> None:
         # workload-lowered rCiM vs conventional roofline per token —
         # merged under "system" in BENCH_explorer.json
         bench_system.run(csv, scale=args.scale, out_json="BENCH_explorer.json")
+    if "faults" in which:
+        from . import bench_faults
+
+        # journal overhead + crash-recovery latency of the resumable
+        # sweep — merged under "faults" in BENCH_explorer.json
+        bench_faults.run(csv, scale=args.scale, cache=cache,
+                         out_json="BENCH_explorer.json")
     if "explorer" in which:
         from . import bench_explorer
 

@@ -42,6 +42,7 @@ computational cycle").  Macro sizes follow Table II ((256x256)=8KB,
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Sequence
 
@@ -391,6 +392,22 @@ class ModelTable:
             elif not per_op and arr.ndim == 2 and arr.shape[1] > 1:
                 t = arr.shape[1]
         return t
+
+    def content_key(self) -> str:
+        """Content hash over every field's bytes + shape, plus the name
+        tuples — stable across processes (unlike ``id``/pickling), so it
+        keys the service's grid cache and the sweep journal's config
+        fingerprint: two tables with the same key produce bit-identical
+        sweep results."""
+        h = hashlib.sha1()
+        for f in dataclasses.fields(EnergyModel):
+            arr = np.ascontiguousarray(getattr(self, f.name))
+            h.update(f.name.encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+        h.update(repr(self.names).encode())
+        h.update(repr(self.topology_names).encode())
+        return h.hexdigest()[:16]
 
     @classmethod
     def from_models(

@@ -23,15 +23,21 @@ Faithfulness notes vs ABC:
 
 from __future__ import annotations
 
+import dataclasses
+import heapq
 import itertools
 import json
 import os
 import tempfile
+import time
 from functools import lru_cache, partial
 from pathlib import Path
+from random import Random
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
+
+from repro.runtime import faults
 
 from .aig import (
     CONST0,
@@ -1191,10 +1197,16 @@ def _recipe_key(recipe: tuple[str, ...]) -> str:
 def _atomic_json(path: Path, payload: dict) -> None:
     """Write JSON via tempfile + ``os.replace`` (crash/concurrency safe)."""
     path.parent.mkdir(parents=True, exist_ok=True)
+    # Serialize first, write bytes: the chaos harness can then model a
+    # torn write (truncated payload surviving the atomic replace) that
+    # the tolerant load paths below must absorb as a cache miss.
+    data = faults.corrupt(
+        "cache.store", json.dumps(payload).encode(), detail=str(path)
+    )
     fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
     try:
-        with os.fdopen(fd, "w") as f:
-            json.dump(payload, f)
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
         os.replace(tmp, path)
     except BaseException:
         try:
@@ -1229,19 +1241,29 @@ class CharacterizationCache:
         return self.root / f"v{TRANSFORM_VERSION}" / f"{circuit_fp}.json"
 
     def load(self, circuit_fp: str) -> dict[tuple[str, ...], AigStats]:
-        """All cached characterizations for a circuit (empty dict on miss)."""
+        """All cached characterizations for a circuit (empty dict on miss).
+
+        Corruption-tolerant: a truncated or otherwise unparseable file is
+        a whole-circuit miss, and a schema-corrupt *entry* (wrong keys /
+        types inside valid JSON) is an entry-level miss — either way the
+        caller re-characterizes and `store` atomically rewrites the file,
+        so a torn write never wedges the cache."""
         path = self._path(circuit_fp)
         try:
             with open(path) as f:
                 raw = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return {}
-        if raw.get("transform_version") != TRANSFORM_VERSION:
+            if raw.get("transform_version") != TRANSFORM_VERSION:
+                return {}
+            items = list(raw.get("recipes", {}).items())
+        except (OSError, json.JSONDecodeError, TypeError, AttributeError):
             return {}
         out: dict[tuple[str, ...], AigStats] = {}
-        for key, d in raw.get("recipes", {}).items():
-            recipe = tuple(key.split(",")) if key else ()
-            out[recipe] = AigStats.from_dict(d)
+        for key, d in items:
+            try:
+                recipe = tuple(key.split(",")) if key else ()
+                out[recipe] = AigStats.from_dict(d)
+            except (KeyError, TypeError, ValueError, AttributeError):
+                continue  # corrupt entry -> miss for that recipe only
         return out
 
     def store(
@@ -1282,17 +1304,23 @@ class CharacterizationCache:
         try:
             with open(self._apps_path(circuit_fp)) as f:
                 raw = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return {}
-        if raw.get("transform_version") != TRANSFORM_VERSION:
+            if raw.get("transform_version") != TRANSFORM_VERSION:
+                return {}
+            items = list(raw.get("apps", {}).items())
+        except (OSError, json.JSONDecodeError, TypeError, AttributeError):
             return {}
         out: dict[tuple[str, str], tuple[str, AigStats | None]] = {}
-        for key, d in raw.get("apps", {}).items():
-            src_fp, _, transform = key.rpartition(":")
-            if not src_fp or transform not in TRANSFORM_NAMES:
-                continue
-            stats = AigStats.from_dict(d["stats"]) if d.get("stats") else None
-            out[(src_fp, transform)] = (d["out"], stats)
+        for key, d in items:
+            try:
+                src_fp, _, transform = key.rpartition(":")
+                if not src_fp or transform not in TRANSFORM_NAMES:
+                    continue
+                stats = (
+                    AigStats.from_dict(d["stats"]) if d.get("stats") else None
+                )
+                out[(src_fp, transform)] = (d["out"], stats)
+            except (KeyError, TypeError, ValueError, AttributeError):
+                continue  # corrupt application entry -> redo that one
         return out
 
     def load_aig(self, fp: str) -> Aig | None:
@@ -1301,7 +1329,8 @@ class CharacterizationCache:
             with open(self._aig_path(fp)) as f:
                 raw = json.load(f)
             aig = Aig.from_dict(raw)
-        except (OSError, json.JSONDecodeError, KeyError, ValueError, IndexError):
+        except (OSError, json.JSONDecodeError, KeyError, ValueError,
+                IndexError, TypeError, AttributeError):
             return None
         return aig if aig.fingerprint() == fp else None
 
@@ -1328,10 +1357,14 @@ class CharacterizationCache:
                 raw = json.load(f)
             if raw.get("transform_version") != TRANSFORM_VERSION:
                 raw = {}
-        except (OSError, json.JSONDecodeError):
+        except (OSError, json.JSONDecodeError, TypeError, AttributeError):
             raw = {}
         apps = raw.get("apps", {})
+        if not isinstance(apps, dict):
+            apps = {}
         entry = apps.get(f"{src_fp}:{transform}", {})
+        if not isinstance(entry, dict):
+            entry = {}
         apps[f"{src_fp}:{transform}"] = dict(
             out=out_fp,
             stats=stats.to_dict() if stats is not None else entry.get("stats"),
@@ -1367,8 +1400,45 @@ def _characterize_task(task):
     AigStats) — the parent installs it via `RecipeRunner.record`.
     """
     name, src_fp, transform, aig, backend = task
+    faults.inject("pool.task", detail=f"{name}:{transform}")
     out = transform_fns(backend)[transform](aig)
     return name, src_fp, transform, out, out.characterize()
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolPolicy:
+    """Fault posture of the characterization pool scheduler.
+
+    ``task_deadline_s``: wall-clock budget per dispatched application;
+    exceeding it counts as one failed attempt and — since a running
+    `ProcessPoolExecutor` task cannot be cancelled — forces a pool
+    rebuild so the stuck worker is actually killed.  ``max_retries`` is
+    *additional* attempts after the first (so 2 means up to 3 runs);
+    retries wait ``backoff_s * 2**attempt`` seconds (capped) scaled by a
+    deterministic per-(task, attempt) jitter in [0.5, 1.5) keyed on
+    ``seed``, so a chaos failure replays exactly.
+    """
+
+    task_deadline_s: float | None = None
+    max_retries: int = 2
+    backoff_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    seed: int = 0
+
+    def backoff(self, key: str, attempt: int) -> float:
+        base = min(self.backoff_cap_s, self.backoff_s * (2.0 ** attempt))
+        return base * (0.5 + Random(f"{self.seed}:{key}:{attempt}").random())
+
+
+class CharacterizationError(RuntimeError):
+    """A circuit's characterization failed permanently (poisoned task:
+    retries exhausted, or repeated worker crashes/hangs attributed to
+    it).  Carries the circuit so suite-level callers can quarantine it
+    instead of aborting the whole sweep."""
+
+    def __init__(self, circuit: str, message: str):
+        super().__init__(f"{circuit}: {message}")
+        self.circuit = circuit
 
 
 def _resolve_jobs(n_jobs: int | None, backend: str = "python") -> int:
@@ -1403,6 +1473,8 @@ def characterize_suite(
     cache: "CharacterizationCache | str | os.PathLike | None" = None,
     n_jobs: int | None = None,
     backend: str = "auto",
+    policy: "PoolPolicy | None" = None,
+    failures: "dict[str, CharacterizationError] | None" = None,
 ) -> dict[str, dict[tuple[str, ...], AigStats]]:
     """Front half of Algorithm I (lines 3-6) over a whole benchmark suite.
 
@@ -1435,6 +1507,14 @@ def characterize_suite(
     Cache-backed runs also persist every *application* as it completes
     (`CharacterizationCache.store_application`), so a run that dies
     mid-suite warm-starts from the applications it already did.
+
+    ``policy`` sets the pool's fault posture (`PoolPolicy`: per-task
+    deadlines, bounded retry with deterministic backoff + jitter, pool
+    rebuild on worker loss).  ``failures``: pass a dict to opt into
+    *quarantine* mode — a circuit whose characterization fails
+    permanently is dropped from the returned mapping and recorded there
+    as ``{name: CharacterizationError}`` instead of aborting the whole
+    suite; with the default ``None`` the first permanent failure raises.
     """
     recipes = [
         tuple(r) for r in (recipes if recipes is not None else enumerate_recipes())
@@ -1442,45 +1522,67 @@ def characterize_suite(
     wanted = list(dict.fromkeys([()] + recipes))
     cache = _as_cache(cache)
     backend = resolve_backend(backend)
+    failed: dict[str, CharacterizationError] = {}
 
     out: dict[str, dict[tuple[str, ...], AigStats]] = {}
     runners: dict[str, RecipeRunner] = {}
     fps: dict[str, str] = {}
     for name, rtl in circuits.items():
-        fps[name] = rtl.fingerprint()
-        cached = cache.load(fps[name]) if cache is not None else {}
-        if cached and all(r in cached for r in wanted):
+        try:
+            faults.inject("cha.backend", detail=f"{backend}:{name}")
+            fps[name] = rtl.fingerprint()
+            cached = cache.load(fps[name]) if cache is not None else {}
+            if cached and all(r in cached for r in wanted):
+                if cache is not None:
+                    cache.hits += 1
+                out[name] = {r: cached[r] for r in wanted}
+                continue
             if cache is not None:
-                cache.hits += 1
-            out[name] = {r: cached[r] for r in wanted}
-            continue
-        if cache is not None:
-            cache.misses += 1
-        runner = RecipeRunner(rtl, backend=backend)
-        if cache is not None:
-            # Partial warm start: replay persisted applications into the
-            # structural memo, then persist every fresh one incrementally.
-            for (src_fp, t), (out_fp, st) in cache.load_applications(
-                fps[name]
-            ).items():
-                out_aig = cache.load_aig(out_fp)
-                if out_aig is not None:
-                    runner.preload_application(src_fp, t, out_aig, st)
-            runner.on_apply = partial(
-                _persist_application, cache, fps[name], runner
-            )
-        runners[name] = runner
+                cache.misses += 1
+            runner = RecipeRunner(rtl, backend=backend)
+            if cache is not None:
+                # Partial warm start: replay persisted applications into the
+                # structural memo, then persist every fresh one incrementally.
+                for (src_fp, t), (out_fp, st) in cache.load_applications(
+                    fps[name]
+                ).items():
+                    out_aig = cache.load_aig(out_fp)
+                    if out_aig is not None:
+                        runner.preload_application(src_fp, t, out_aig, st)
+                runner.on_apply = partial(
+                    _persist_application, cache, fps[name], runner
+                )
+            runners[name] = runner
+        except Exception as e:  # noqa: BLE001 — quarantine, don't abort
+            err = CharacterizationError(name, f"{type(e).__name__}: {e}")
+            if failures is None:
+                raise err from e
+            failed[name] = err
 
     if runners:
-        _run_suite_dag(runners, wanted, n_jobs, backend)
+        _run_suite_dag(runners, wanted, n_jobs, backend, policy=policy,
+                       failed=failed if failures is not None else None)
         for name, runner in runners.items():
-            cha = {r: runner.stats(r) for r in wanted}
+            if name in failed:
+                continue
+            try:
+                cha = {r: runner.stats(r) for r in wanted}
+            except Exception as e:  # noqa: BLE001
+                err = CharacterizationError(name, f"{type(e).__name__}: {e}")
+                if failures is None:
+                    raise err from e
+                failed[name] = err
+                continue
             out[name] = cha
             if cache is not None:
                 cache.store(fps[name], cha)
 
-    # Preserve the caller's circuit order.
-    return {name: out[name] for name in circuits}
+    if failed:
+        if failures is None:
+            raise next(iter(failed.values()))
+        failures.update(failed)
+    # Preserve the caller's circuit order; quarantined circuits are absent.
+    return {name: out[name] for name in circuits if name in out}
 
 
 def _persist_application(
@@ -1511,6 +1613,8 @@ def _run_suite_dag(
     wanted: Sequence[tuple[str, ...]],
     n_jobs: int | None,
     backend: str = "python",
+    policy: "PoolPolicy | None" = None,
+    failed: "dict[str, CharacterizationError] | None" = None,
 ) -> None:
     """Evaluate every prefix node of ``wanted`` in all runners on an
     as-completed futures scheduler.
@@ -1524,25 +1628,47 @@ def _run_suite_dag(
     same (circuit, input fingerprint, transform) application share one
     in-flight future, and applications a runner already knows resolve
     instantly and cascade into their children.
+
+    Fault posture (``policy``, default `PoolPolicy`):
+
+      * a task raising in the worker is retried up to ``max_retries``
+        times with deterministic exponential backoff + jitter;
+      * a task exceeding ``task_deadline_s`` forces a **pool rebuild**
+        (running `ProcessPoolExecutor` tasks cannot be cancelled, so the
+        stuck workers are terminated) and counts as a failed attempt;
+      * `BrokenProcessPool` — a worker died (OOM-kill, hard crash) —
+        also rebuilds the pool; every other in-flight task is
+        re-dispatched at its current attempt count, the task whose
+        future broke is charged one attempt;
+      * a task out of attempts poisons its *circuit*: with ``failed``
+        provided the circuit is quarantined there
+        (`CharacterizationError`) and the rest of the suite proceeds;
+        otherwise the error raises.
     """
     nodes = prefix_nodes(wanted)
     if not nodes:
         return
+    policy = policy or PoolPolicy()
     n_jobs = _resolve_jobs(n_jobs, backend)
     if n_jobs == 1:
         # Serial: the memoized DAG walk itself (depth order from
-        # prefix_nodes guarantees parents resolve first).
-        for runner in runners.values():
-            for node in nodes:
-                runner.run_fp(node)
+        # prefix_nodes guarantees parents resolve first).  Quarantine is
+        # per circuit here too — one poisoned netlist cannot sink the
+        # suite when the caller opted in.
+        for name, runner in runners.items():
+            try:
+                for node in nodes:
+                    runner.run_fp(node)
+            except Exception as e:  # noqa: BLE001
+                err = CharacterizationError(name, f"{type(e).__name__}: {e}")
+                if failed is None:
+                    raise err from e
+                failed[name] = err
         return
 
     import multiprocessing as mp
-    from concurrent.futures import (
-        FIRST_COMPLETED,
-        ProcessPoolExecutor,
-        wait,
-    )
+    from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+    from concurrent.futures.process import BrokenProcessPool
 
     # DAG edges: parent prefix -> the nodes it unblocks.  prefix_nodes
     # includes every non-empty prefix, so each node's parent is () or
@@ -1573,23 +1699,150 @@ def _run_suite_dag(
         waiting[key] = [node]
         tasks.append((name, src_fp, t, runner.aig_for(src_fp), backend))
 
-    with ProcessPoolExecutor(
+    def task_key(task) -> str:
+        return f"{task[0]}:{task[1]}:{task[2]}"
+
+    dead: set[str] = set()
+
+    def quarantine(name: str, reason: str) -> None:
+        err = CharacterizationError(name, reason)
+        if failed is None:
+            raise err
+        failed[name] = err
+        dead.add(name)
+        # Nothing waiting on a dead circuit resolves; drop its
+        # bookkeeping so the scheduler can drain.
+        for key in [k for k in waiting if k[0] == name]:
+            del waiting[key]
+
+    ex = ProcessPoolExecutor(
         max_workers=n_jobs, mp_context=mp.get_context("spawn")
-    ) as ex:
+    )
+    # fut -> (task, attempt, dispatch wall time)
+    inflight: dict = {}
+    # min-heap of (ready_at, seq, task, attempt) retry reservations — the
+    # scheduler sleeps in `wait` timeouts instead of blocking on backoff.
+    retries: list = []
+    seq = 0
+
+    def submit(task, attempt):
+        inflight[ex.submit(_characterize_task, task)] = (
+            task, attempt, time.monotonic(),
+        )
+
+    def schedule_retry(task, attempt, reason):
+        nonlocal seq
+        if attempt > policy.max_retries:
+            quarantine(task[0], f"task {task[2]} failed permanently: {reason}")
+            return
+        ready = time.monotonic() + policy.backoff(task_key(task), attempt - 1)
+        heapq.heappush(retries, (ready, seq, task, attempt))
+        seq += 1
+
+    def rebuild_pool():
+        """Terminate every worker and start a fresh pool; the caller
+        re-dispatches whatever was in flight."""
+        nonlocal ex
+        for p in list(getattr(ex, "_processes", {}).values()):
+            try:
+                p.terminate()
+            except OSError:
+                pass
+        ex.shutdown(wait=False, cancel_futures=True)
+        ex = ProcessPoolExecutor(
+            max_workers=n_jobs, mp_context=mp.get_context("spawn")
+        )
+
+    def redispatch_inflight(charge: dict) -> None:
+        """Move every in-flight task onto the fresh pool.  ``charge``
+        maps a task key to the failure reason for tasks that burned an
+        attempt (broken future, expired deadline); the rest resubmit at
+        their current attempt count."""
+        moved = list(inflight.values())
+        inflight.clear()
+        for task, attempt, _ in moved:
+            if task[0] in dead:
+                continue
+            reason = charge.get(task_key(task))
+            if reason is not None:
+                schedule_retry(task, attempt + 1, reason)
+            else:
+                submit(task, attempt)
+
+    try:
         tasks: list[tuple] = []
         for name, runner in runners.items():
             for node in children.get((), []):
                 advance(name, runner, node, tasks)
-        pending = {ex.submit(_characterize_task, t) for t in tasks}
-        while pending:
-            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+        for t in tasks:
+            submit(t, 0)
+        while inflight or retries:
+            now = time.monotonic()
+            # Launch due retries; the earliest pending one bounds the wait.
+            while retries and retries[0][0] <= now:
+                _, _, task, attempt = heapq.heappop(retries)
+                if task[0] not in dead:
+                    submit(task, attempt)
+            timeout = None
+            if retries:
+                timeout = max(0.0, retries[0][0] - now)
+            if policy.task_deadline_s is not None and inflight:
+                oldest = min(t0 for _, _, t0 in inflight.values())
+                expiry = oldest + policy.task_deadline_s - now
+                timeout = expiry if timeout is None else min(timeout, expiry)
+            if not inflight:
+                if timeout:
+                    time.sleep(timeout)
+                continue
+            done, _ = wait(
+                inflight, timeout=timeout, return_when=FIRST_COMPLETED
+            )
             tasks = []
+            broken: list[tuple] = []
             for fut in done:
-                name, src_fp, t, aig, stats = fut.result()
+                task, attempt, _ = inflight.pop(fut)
+                try:
+                    name, src_fp, t, aig, stats = fut.result()
+                except BrokenProcessPool as e:
+                    broken.append((task, attempt, f"worker died: {e}"))
+                    continue
+                except Exception as e:  # noqa: BLE001 — task raised in worker
+                    schedule_retry(
+                        task, attempt + 1, f"{type(e).__name__}: {e}"
+                    )
+                    continue
+                if name in dead:
+                    continue
                 runner = runners[name]
                 runner.record(src_fp, t, aig, stats)
-                for node in waiting.pop((name, src_fp, t)):
+                for node in waiting.pop((name, src_fp, t), []):
                     runner.run_fp(node)
                     for child in children.get(node, []):
                         advance(name, runner, child, tasks)
-            pending |= {ex.submit(_characterize_task, t) for t in tasks}
+            if broken:
+                rebuild_pool()
+                redispatch_inflight({})
+                for task, attempt, reason in broken:
+                    if task[0] not in dead:
+                        schedule_retry(task, attempt + 1, reason)
+            elif policy.task_deadline_s is not None:
+                now = time.monotonic()
+                expired = {
+                    task_key(task): f"deadline {policy.task_deadline_s}s "
+                    f"exceeded"
+                    for task, _, t0 in inflight.values()
+                    if now - t0 > policy.task_deadline_s
+                }
+                if expired:
+                    rebuild_pool()
+                    redispatch_inflight(expired)
+            for t in tasks:
+                if t[0] not in dead:
+                    submit(t, 0)
+    finally:
+        for p in list(getattr(ex, "_processes", {}).values()):
+            try:
+                p.terminate()
+            except OSError:
+                pass
+        ex.shutdown(wait=False, cancel_futures=True)

@@ -1,0 +1,5 @@
+"""Runtime hardening utilities shared by the long-running layers.
+
+`repro.runtime.faults` is the deterministic fault-injection registry the
+chaos tests and CI profile drive; it is strictly a no-op unless armed.
+"""

@@ -39,7 +39,23 @@ Robustness is part of the contract: a malformed circuit, an infeasible
 memory budget, or an all-non-finite (NaN-salted) model sweep yields a
 *structured* `ServiceError` on that request's future while the rest of
 the batch keeps being served; the worker thread never dies on request
-data.
+data.  Three further layers harden the service against its own runtime
+(exercised by tests/test_service_faults.py and the chaos CI profile):
+
+  * **per-request deadlines** — ``ExploreRequest.deadline_s`` (or the
+    service-wide ``default_deadline_s``) bounds submit-to-answer wall
+    time; an expired request resolves to ``deadline-exceeded`` at batch
+    pickup or before the answer is assembled, instead of occupying the
+    pipeline;
+  * **worker supervision** — an exception escaping the batch pipeline
+    (a bug, an injected ``service.process`` fault) fails that batch's
+    unresolved futures with ``worker-crashed`` and the loop keeps
+    serving; if the thread dies anyway, the next `submit` respawns it
+    (``worker_restarts`` stat) — queued futures are never stranded;
+  * **graceful degradation** — a device-backend characterization
+    failure retries on the ``backend="python"`` parity path; the answer
+    is bit-identical (both backends are exact) but arrives slower and
+    carries ``ExploreResponse.degraded=True`` plus a ``degraded`` stat.
 
 Parity: every answer is bit-identical (same winner cell, same tiering
 and tie-breaking) to a one-shot `explorer.explore_request` call with the
@@ -51,7 +67,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import hashlib
 import os
 import queue
 import threading
@@ -88,7 +103,9 @@ from repro.core.sram import (
 from repro.core.transforms import (
     CharacterizationCache,
     characterize_suite,
+    resolve_backend,
 )
+from repro.runtime import faults
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +124,10 @@ class ExploreRequest:
     max_latency_ns: float | None = None
     model_sweep: ModelTable | None = None
     tag: str | None = None  # caller correlation id, echoed in the response
+    #: submit-to-answer wall-clock budget in seconds (None = the
+    #: service's ``default_deadline_s``); expiry resolves the future
+    #: with a ``deadline-exceeded`` `ServiceError`.
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,12 +136,16 @@ class ServiceError:
     resolves (to a response carrying this), the batch keeps serving.
 
     Codes: ``malformed-circuit`` (input is not a usable AIG),
-    ``characterization-failed`` (the transform front half raised),
-    ``infeasible-memory`` (no candidate topology fits the budget),
-    ``no-finite-energy`` (every admissible cell is NaN/inf — e.g. a
-    pathological model sweep), ``shutdown`` (service stopped before the
-    request was served), ``internal`` (unexpected bug, message carries
-    the exception).
+    ``characterization-failed`` (the transform front half raised, on
+    every backend tried), ``infeasible-memory`` (no candidate topology
+    fits the budget), ``no-finite-energy`` (every admissible cell is
+    NaN/inf — e.g. a pathological model sweep), ``deadline-exceeded``
+    (the request's wall-clock budget expired before an answer),
+    ``worker-crashed`` (an exception escaped the batch pipeline; the
+    batch's unresolved futures all resolve with this and the worker
+    keeps serving), ``shutdown`` (service stopped before the request
+    was served), ``internal`` (unexpected bug, message carries the
+    exception).
     """
 
     code: str
@@ -179,6 +204,7 @@ class ExploreResponse:
     bucket: tuple | None = None       # (C, R, L_pad, T, V) trace bucket
     cha_cache_hit: bool = False       # front half skipped (memo/disk)
     grid_cache_hit: bool = False      # back half skipped (re-rank only)
+    degraded: bool = False            # served via a fallback backend
     queued_ms: float = 0.0            # submit -> batch pickup
     service_ms: float = 0.0           # batch pickup -> answer
 
@@ -202,6 +228,7 @@ class _Pending:
     error: ServiceError | None = None
     cha_hit: bool = False
     grid_hit: bool = False
+    degraded: bool = False
 
 
 @dataclasses.dataclass
@@ -224,15 +251,7 @@ def _model_key(table: ModelTable | None) -> str:
     ``None`` (the service's nominal model) hashes to a fixed key."""
     if table is None:
         return "nominal"
-    h = hashlib.sha1()
-    for f in dataclasses.fields(EnergyModel):
-        arr = np.ascontiguousarray(getattr(table, f.name))
-        h.update(f.name.encode())
-        h.update(str(arr.shape).encode())
-        h.update(arr.tobytes())
-    h.update(repr(table.names).encode())
-    h.update(repr(table.topology_names).encode())
-    return h.hexdigest()[:16]
+    return table.content_key()
 
 
 _SENTINEL = object()
@@ -278,6 +297,7 @@ class ExplorationService:
         cha_backend: str = "auto",
         max_batch: int = 8,
         grid_cache_size: int = 128,
+        default_deadline_s: float | None = None,
         start: bool = True,
     ):
         if not B.jax_available():  # pragma: no cover - container ships jax
@@ -301,6 +321,7 @@ class ExplorationService:
         self._cha_backend = cha_backend
         self.max_batch = max_batch
         self._grid_cache_size = grid_cache_size
+        self.default_deadline_s = default_deadline_s
 
         self._queue: "queue.Queue" = queue.Queue()
         # Worker-thread-only state (no locks needed beyond the queue):
@@ -330,6 +351,7 @@ class ExplorationService:
         itself only raises on cancellation)."""
         if self._closed:
             raise RuntimeError("ExplorationService is closed")
+        self._ensure_worker()
         p = _Pending(request, Future(), time.perf_counter())
         with self._stats_lock:
             self._stats["submitted"] += 1
@@ -400,14 +422,52 @@ class ExplorationService:
 
     # -- worker --------------------------------------------------------------
 
+    def _ensure_worker(self) -> None:
+        """Crash detection at the submit edge: a worker thread that died
+        anyway (an error the loop supervision re-raised, a library-level
+        crash) is replaced before the new request enqueues, so futures
+        are never parked behind a dead consumer."""
+        t = self._thread
+        if t is None or t.is_alive() or self._closed:
+            return
+        with self._stats_lock:
+            self._stats["worker_restarts"] += 1
+        self._thread = threading.Thread(
+            target=self._serve_loop, name="explore-service", daemon=True
+        )
+        self._thread.start()
+
     def _serve_loop(self) -> None:
         while True:
             batch = self._drain(block=True)
             if batch is None:  # sentinel: drain leftovers, then exit
                 self._fail_queue()
                 return
-            if batch:
+            if not batch:
+                continue
+            try:
                 self._process(batch)
+            except BaseException as e:  # noqa: BLE001 — supervised loop
+                # An exception escaping the batch pipeline used to kill
+                # this thread and strand every queued future.  Fail the
+                # batch's unresolved futures with a structured error and
+                # keep serving; genuinely fatal signals still propagate
+                # (the next submit() respawns the worker).
+                self._crash_batch(batch, e)
+                if isinstance(e, (KeyboardInterrupt, SystemExit)):
+                    raise
+
+    def _crash_batch(self, batch: list, exc: BaseException) -> None:
+        err = ServiceError(
+            "worker-crashed", f"{type(exc).__name__}: {exc}"
+        )
+        now = time.perf_counter()
+        for p in batch:
+            if not p.future.done():
+                p.error = err
+                self._resolve(p, now)
+        with self._stats_lock:
+            self._stats["worker_crashes"] += 1
 
     def _drain(self, block: bool) -> "list[_Pending] | None":
         """Continuous batching: take the next request (blocking only in
@@ -451,8 +511,27 @@ class ExplorationService:
 
     # -- batch pipeline ------------------------------------------------------
 
+    def _deadline_expired(self, p: _Pending) -> bool:
+        """Mark ``p`` with a structured deadline error if its wall-clock
+        budget (request-level, else service default) has run out."""
+        if p.error is not None:
+            return False
+        d = p.request.deadline_s
+        if d is None:
+            d = self.default_deadline_s
+        if d is None or time.perf_counter() - p.t_submit <= d:
+            return False
+        p.error = ServiceError(
+            "deadline-exceeded",
+            f"request exceeded its {d:g}s deadline before an answer",
+        )
+        with self._stats_lock:
+            self._stats["deadline_exceeded"] += 1
+        return True
+
     def _process(self, batch: list[_Pending]) -> None:
         t0 = time.perf_counter()
+        faults.inject("service.process", detail=str(len(batch)))
         live: list[_Pending] = []
         for p in batch:
             if p.future.set_running_or_notify_cancel():
@@ -464,10 +543,13 @@ class ExplorationService:
             return
         for p in live:
             self._admit(p)
+            # Deadline check at pickup: an already-expired request must
+            # not occupy the characterize/evaluate pipeline.
+            self._deadline_expired(p)
         self._characterize([p for p in live if p.error is None])
         self._evaluate([p for p in live if p.error is None])
         for p in live:
-            if p.error is None:
+            if p.error is None and not self._deadline_expired(p):
                 try:
                     self._answer(p, t0)
                     continue
@@ -518,7 +600,14 @@ class ExplorationService:
     def _characterize(self, live: list[_Pending]) -> None:
         """Front half per unique fingerprint: in-memory memo -> on-disk
         `CharacterizationCache` -> transforms.  Failures are isolated
-        per circuit (one bad netlist cannot sink its batch-mates)."""
+        per circuit (one bad netlist cannot sink its batch-mates).
+
+        Degradation ladder: when the configured backend (``"auto"``
+        resolves to the device engine) fails, the same circuit retries
+        on the ``"python"`` parity path — both backends are exact, so
+        the answer is bit-identical, just slower; the requests served
+        that way carry ``degraded=True``.  Only when every rung fails
+        does the request get ``characterization-failed``."""
         todo: dict[str, Aig] = {}
         for p in live:
             if p.fp in self._cha:
@@ -529,25 +618,44 @@ class ExplorationService:
         with self._stats_lock:
             self._stats["cha_hits"] += sum(1 for p in live if p.cha_hit)
             self._stats["cha_misses"] += len(todo)
+        ladder = [self._cha_backend]
+        if resolve_backend(self._cha_backend) != "python":
+            ladder.append("python")
         for fp, rtl in todo.items():
-            try:
-                cha = characterize_suite(
-                    {rtl.name: rtl},
-                    self._recipes,
-                    cache=self._cache,
-                    n_jobs=self._n_jobs,
-                    backend=self._cha_backend,
-                )[rtl.name]
-            except Exception as e:  # noqa: BLE001 - isolate the request
+            entry = None
+            errors = []
+            for rung, backend in enumerate(ladder):
+                try:
+                    cha = characterize_suite(
+                        {rtl.name: rtl},
+                        self._recipes,
+                        cache=self._cache,
+                        n_jobs=self._n_jobs,
+                        backend=backend,
+                    )[rtl.name]
+                    # Empty/degenerate characterizations must fail the
+                    # request, not the worker thread (min() on an empty
+                    # map used to escape the guard and kill the loop).
+                    min_gates = min(s.total_gates for s in cha.values())
+                    entry = (cha, min_gates)
+                    break
+                except Exception as e:  # noqa: BLE001 - isolate the request
+                    errors.append(f"{backend}: {type(e).__name__}: {e}")
+            if entry is None:
                 err = ServiceError(
-                    "characterization-failed", f"{type(e).__name__}: {e}"
+                    "characterization-failed", "; ".join(errors)
                 )
                 for p in live:
                     if p.fp == fp:
                         p.error = err
                 continue
-            min_gates = min(s.total_gates for s in cha.values())
-            self._cha[fp] = (cha, min_gates)
+            if rung > 0:
+                with self._stats_lock:
+                    self._stats["degraded"] += 1
+                for p in live:
+                    if p.fp == fp:
+                        p.degraded = True
+            self._cha[fp] = entry
             while len(self._cha) > max(4 * self._grid_cache_size, 64):
                 self._cha.popitem(last=False)
 
@@ -807,6 +915,7 @@ class ExplorationService:
             bucket=getattr(entry, "bucket", None),
             cha_cache_hit=p.cha_hit,
             grid_cache_hit=p.grid_hit,
+            degraded=p.degraded,
             queued_ms=(t0 - p.t_submit) * 1e3,
             service_ms=(time.perf_counter() - t0) * 1e3,
         )

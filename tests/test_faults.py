@@ -1,0 +1,205 @@
+"""Unit contract of the fault-injection registry (`repro.runtime.faults`).
+
+The load-bearing guarantee is the first one: with no plan armed, every
+injection point in the codebase is a strict no-op — production behavior
+is bit-identical with the module imported or not.  The chaos CI profile
+re-asserts this before running the fault matrix.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.runtime import faults
+
+
+@pytest.fixture(autouse=True)
+def _disarmed():
+    """Every test starts and ends with no plan armed."""
+    faults.disable()
+    yield
+    faults.disable()
+
+
+# ---------------------------------------------------------------------------
+# disabled means invisible
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_inject_is_noop_for_every_point():
+    assert not faults.enabled()
+    for point in faults.POINTS:
+        faults.inject(point, detail="anything")  # must not raise/hang/exit
+
+
+def test_disabled_corrupt_returns_payload_unchanged():
+    payload = b"x" * 257
+    for point in faults.POINTS:
+        assert faults.corrupt(point, payload) is payload
+
+
+def test_disabled_corrupt_file_leaves_file_alone(tmp_path):
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"y" * 100)
+    for point in faults.POINTS:
+        faults.corrupt_file(point, p)
+    assert p.read_bytes() == b"y" * 100
+
+
+def test_unknown_point_or_action_fails_loudly():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        faults.FaultRule("no.such.point", "raise")
+    with pytest.raises(ValueError, match="unknown fault action"):
+        faults.FaultRule("pool.task", "explode")
+
+
+# ---------------------------------------------------------------------------
+# armed behavior: match / after / count, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_raise_fires_and_counts():
+    with faults.injected(faults.FaultRule("pool.task", "raise")) as plan:
+        with pytest.raises(faults.FaultError):
+            faults.inject("pool.task", "adder:Rw")
+        # count=1 exhausted: the second hit passes through
+        faults.inject("pool.task", "adder:Rw")
+        assert plan.fired["pool.task"] == 1
+        assert plan.hits[0] == 2
+    # context manager restored the disarmed state
+    faults.inject("pool.task", "adder:Rw")
+
+
+def test_match_filters_on_detail_substring():
+    rule = faults.FaultRule("pool.task", "raise", match="sine", count=None)
+    with faults.injected(rule):
+        faults.inject("pool.task", "adder:Rw")  # no match -> no fire
+        with pytest.raises(faults.FaultError):
+            faults.inject("pool.task", "sine:Ba")
+
+
+def test_after_skips_leading_hits():
+    rule = faults.FaultRule("sweep.shard", "raise", after=2, count=1)
+    with faults.injected(rule):
+        faults.inject("sweep.shard", "s0")
+        faults.inject("sweep.shard", "s1")
+        with pytest.raises(faults.FaultError):
+            faults.inject("sweep.shard", "s2")
+        faults.inject("sweep.shard", "s3")  # count spent
+
+
+def test_probabilistic_rule_is_seed_deterministic():
+    def firing_pattern(seed, n=32):
+        rule = faults.FaultRule(
+            "service.process", "raise", count=None, prob=0.5
+        )
+        fired = []
+        with faults.injected(rule, seed=seed):
+            for _ in range(n):
+                try:
+                    faults.inject("service.process", "1")
+                    fired.append(False)
+                except faults.FaultError:
+                    fired.append(True)
+        return fired
+
+    a, b = firing_pattern(7), firing_pattern(7)
+    assert a == b
+    assert firing_pattern(8) != a  # different seed, different pattern
+    assert any(a) and not all(a)
+
+
+def test_corrupt_truncates_deterministically():
+    data = bytes(range(256)) * 4
+    with faults.injected(
+        faults.FaultRule("cache.store", "corrupt", count=None), seed=3
+    ):
+        out1 = faults.corrupt("cache.store", data)
+        out2 = faults.corrupt("cache.store", data)
+    assert out1 == out2
+    assert 0 < len(out1) < len(data)
+    assert data.startswith(out1)
+
+
+def test_corrupt_file_truncates_in_place(tmp_path):
+    p = tmp_path / "arrays.npz"
+    p.write_bytes(b"z" * 1000)
+    with faults.injected(faults.FaultRule("journal.write", "corrupt")):
+        faults.corrupt_file("journal.write", p)
+    assert 0 < p.stat().st_size < 1000
+
+
+# ---------------------------------------------------------------------------
+# env parsing (the spawn-worker / subprocess arming path)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_rules_full_syntax():
+    rules = faults.parse_rules(
+        "pool.task:exit::1:1; sweep.shard:raise:adder; "
+        "pool.task:hang:::inf:2.5"
+    )
+    assert len(rules) == 3
+    assert rules[0] == faults.FaultRule("pool.task", "exit", after=1, count=1)
+    assert rules[1].match == "adder" and rules[1].count == 1
+    assert rules[2].count is None and rules[2].hang_s == 2.5
+
+
+def test_parse_rules_rejects_garbage():
+    with pytest.raises(ValueError):
+        faults.parse_rules("pool.task")
+    with pytest.raises(ValueError):
+        faults.parse_rules("typo.point:raise")
+
+
+def test_env_arming_in_subprocess(tmp_path):
+    """The env path is what spawn pool workers and kill-9 subprocesses
+    inherit; exercise it end to end in a real child process."""
+    import subprocess
+    import sys
+
+    code = (
+        "from repro.runtime import faults\n"
+        "assert faults.enabled()\n"
+        "try:\n"
+        "    faults.inject('pool.task', 'adder:Rw')\n"
+        "    raise SystemExit('fault did not fire')\n"
+        "except faults.FaultError:\n"
+        "    pass\n"
+        "print('armed-ok')\n"
+    )
+    env = dict(os.environ, REPRO_FAULTS="pool.task:raise", REPRO_FAULTS_SEED="5")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True
+    )
+    assert out.returncode == 0, out.stderr
+    assert "armed-ok" in out.stdout
+
+
+def test_once_dir_bounds_global_fires(tmp_path, monkeypatch):
+    """With REPRO_FAULTS_ONCE_DIR, a count=2 rule fires exactly twice
+    even if the per-process hit counters would allow more (fresh
+    processes restart their counters; the claim files do not)."""
+    monkeypatch.setenv("REPRO_FAULTS_ONCE_DIR", str(tmp_path))
+    fired = 0
+    for _ in range(3):
+        # each iteration simulates a fresh worker process: new plan state
+        with faults.injected(
+            faults.FaultRule("pool.task", "raise", count=2)
+        ):
+            try:
+                faults.inject("pool.task", "adder:Rw")
+            except faults.FaultError:
+                fired += 1
+    assert fired == 2
+    assert len(list(tmp_path.iterdir())) == 2
+
+
+def test_points_registry_documents_every_point():
+    for point, desc in faults.POINTS.items():
+        assert isinstance(desc, str) and len(desc) > 10, point

@@ -1,0 +1,135 @@
+"""Service-level fault tolerance: deadlines, worker supervision,
+graceful backend degradation.
+
+These pin the three hardening layers of `serve.explore_service` (see its
+module docstring): a crash in the batch pipeline fails that batch with a
+structured ``worker-crashed`` error and the loop keeps serving; a worker
+thread that dies anyway is respawned at the submit edge; an expired
+deadline resolves the request instead of occupying the pipeline; and a
+device-backend characterization failure degrades to the python parity
+path with ``degraded=True`` and a bit-identical answer.
+"""
+
+import time
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.circuits import gen_adder  # noqa: E402
+from repro.core.sram import TOPOLOGY_LIBRARY  # noqa: E402
+from repro.core.transforms import resolve_backend  # noqa: E402
+from repro.runtime import faults  # noqa: E402
+from repro.serve.explore_service import (  # noqa: E402
+    ExplorationService,
+    ExploreRequest,
+)
+
+TOPOS = TOPOLOGY_LIBRARY[:5]
+RECIPES = [(), ("Rw",), ("Ba", "Rw"), ("Rf",)]
+
+
+@pytest.fixture(autouse=True)
+def _disarmed():
+    faults.disable()
+    yield
+    faults.disable()
+
+
+@pytest.fixture(scope="module")
+def adder():
+    return gen_adder(6)
+
+
+def _service(**kw):
+    return ExplorationService(sram_list=TOPOS, recipes=RECIPES, **kw)
+
+
+def test_injected_crash_fails_batch_and_worker_survives(adder):
+    with _service(start=True) as svc:
+        with faults.injected(faults.FaultRule("service.process", "raise")):
+            resp = svc.submit(ExploreRequest(adder)).result(timeout=300)
+        assert not resp.ok and resp.error.code == "worker-crashed"
+        # The supervised loop caught the escape: same thread, next
+        # request served normally.
+        resp2 = svc.submit(ExploreRequest(adder)).result(timeout=300)
+        assert resp2.ok
+        st = svc.stats()
+        assert st["worker_crashes"] == 1
+        assert "worker_restarts" not in st
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning"
+)
+def test_dead_worker_thread_is_respawned_on_submit(adder):
+    svc = _service(start=True)
+    try:
+        orig = svc._process
+
+        def fatal(batch):
+            raise SystemExit("simulated fatal worker error")
+
+        svc._process = fatal
+        # The batch still resolves (crash handler runs before the fatal
+        # signal re-raises and kills the thread).
+        resp = svc.submit(ExploreRequest(adder)).result(timeout=60)
+        assert resp.error.code == "worker-crashed"
+        svc._thread.join(timeout=30)
+        assert not svc._thread.is_alive()
+
+        svc._process = orig
+        resp2 = svc.submit(ExploreRequest(adder)).result(timeout=300)
+        assert resp2.ok
+        assert svc.stats()["worker_restarts"] == 1
+    finally:
+        svc.close()
+
+
+def test_request_deadline_expires_before_pipeline(adder):
+    with _service(start=False) as svc:
+        fut = svc.submit(ExploreRequest(adder, deadline_s=0.0))
+        time.sleep(0.01)
+        svc.pump()
+        resp = fut.result(timeout=5)
+        assert not resp.ok and resp.error.code == "deadline-exceeded"
+        assert resp.winner is None
+        assert svc.stats()["deadline_exceeded"] == 1
+        # A generous deadline on the same circuit answers normally.
+        resp2 = svc.explore(ExploreRequest(adder, deadline_s=600.0))
+        assert resp2.ok
+
+
+def test_service_default_deadline_applies_when_request_has_none(adder):
+    with _service(start=False, default_deadline_s=0.0) as svc:
+        fut = svc.submit(ExploreRequest(adder))
+        time.sleep(0.01)
+        svc.pump()
+        assert fut.result(timeout=5).error.code == "deadline-exceeded"
+        # An explicit per-request deadline overrides the default.
+        resp = svc.explore(ExploreRequest(adder, deadline_s=600.0))
+        assert resp.ok
+
+
+def test_device_cha_failure_degrades_to_python_with_parity(adder):
+    if resolve_backend("auto") != "device":
+        pytest.skip("device backend unavailable; no ladder to descend")
+    with _service(start=False) as clean:
+        ref = clean.explore(ExploreRequest(adder))
+    assert ref.ok and not ref.degraded
+
+    with _service(start=False) as svc:
+        with faults.injected(
+            faults.FaultRule("cha.backend", "raise", match="device")
+        ):
+            resp = svc.explore(ExploreRequest(adder))
+        assert resp.ok and resp.degraded
+        assert svc.stats()["degraded"] == 1
+        # Both backends are exact: the degraded answer is bit-identical.
+        assert resp.winner.recipe == ref.winner.recipe
+        assert resp.winner.topology == ref.winner.topology
+        assert resp.winner.energy_nj == ref.winner.energy_nj
+        assert resp.winner.latency_ns == ref.winner.latency_ns
+        # The memoized repeat is served normally, not flagged degraded.
+        resp2 = svc.explore(ExploreRequest(adder))
+        assert resp2.ok and not resp2.degraded and resp2.cha_cache_hit
